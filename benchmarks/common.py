@@ -1,0 +1,32 @@
+"""Shared benchmark helpers.
+
+Cycle counts convert to wall time at the CS-2 clock (850 MHz, Sec. 8.1):
+1 cycle = 1/850 us.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+CLOCK_MHZ = 850.0
+
+
+def cycles_to_us(cycles: float) -> float:
+    return cycles / CLOCK_MHZ
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.4f},{derived}")
+
+
+class StopWatch:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0
+
+
+__all__ = ["CLOCK_MHZ", "cycles_to_us", "emit", "StopWatch"]

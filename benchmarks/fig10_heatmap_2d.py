@@ -1,0 +1,32 @@
+"""Fig. 10: best 2D AllReduce algorithm per (vector length, grid side).
+The snake replaces ring in the bandwidth-bound region (Sec. 7.6)."""
+
+from __future__ import annotations
+
+from repro.core.selector import heatmap_2d_allreduce
+from benchmarks.common import emit
+
+B_VALUES = [2 ** k for k in range(0, 18, 2)]
+SIDES = [4, 8, 16, 32, 64, 128, 256, 512]
+
+
+def run(verbose: bool = True):
+    grid = heatmap_2d_allreduce(B_VALUES, SIDES)
+    if verbose:
+        print("# B\\side," + ",".join(str(s) for s in SIDES))
+        for i, b in enumerate(B_VALUES):
+            print(f"# {b}," + ",".join(grid[i]))
+    return {"grid": grid}
+
+
+def main():
+    res = run()
+    flat = [c for row in res["grid"] for c in row]
+    # bandwidth-bound corner (large B, small grid) is the snake's region
+    assert res["grid"][-1][0] == "snake", res["grid"][-1]
+    assert "snake" in flat
+    emit("fig10/snake_region_cells", 0.0, str(flat.count("snake")))
+
+
+if __name__ == "__main__":
+    main()

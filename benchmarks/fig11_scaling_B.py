@@ -1,0 +1,65 @@
+"""Fig. 11: 1D row of 512 PEs, increasing vector length.
+
+(a) Broadcast, (b) Reduce, (c) AllReduce -- model prediction vs the flow
+simulator (our deterministic CS-2 stand-in), with relative errors, per
+pattern.  Mirrors the paper's model-accuracy claims (bcast <= 21% error;
+reduce patterns 12-35% mean error).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autogen import compute_tables
+from repro.simulator.runner import (compare_allreduce, compare_broadcast,
+                                    compare_reduce)
+from benchmarks.common import cycles_to_us, emit
+
+P = 512
+B_VALUES = [2 ** k for k in range(0, 17, 2)]
+PATTERNS = ("star", "chain", "tree", "two_phase", "autogen")
+
+
+def run(verbose: bool = True):
+    tables = compute_tables(P)
+    out = {"bcast": [], "reduce": {}, "allreduce": {}}
+    for b in B_VALUES:
+        out["bcast"].append(compare_broadcast(P, b))
+    for pattern in PATTERNS:
+        out["reduce"][pattern] = [
+            compare_reduce(pattern, P, b, tables=tables) for b in B_VALUES]
+        out["allreduce"][pattern] = [
+            compare_allreduce(pattern, P, b, tables=tables)
+            for b in B_VALUES]
+
+    if verbose:
+        errs = [c.rel_error for c in out["bcast"]]
+        emit("fig11a/bcast_err_max", 0.0, f"{max(errs):.3f}")
+        for pattern in PATTERNS:
+            sims = out["reduce"][pattern]
+            mean_err = float(np.mean([c.rel_error for c in sims]))
+            last = sims[-1]
+            emit(f"fig11b/reduce/{pattern}",
+                 cycles_to_us(last.sim_cycles),
+                 f"B={B_VALUES[-1]},err={mean_err:.3f}")
+        for pattern in PATTERNS:
+            sims = out["allreduce"][pattern]
+            mean_err = float(np.mean([c.rel_error for c in sims]))
+            emit(f"fig11c/allreduce/{pattern}",
+                 cycles_to_us(sims[-1].sim_cycles),
+                 f"err={mean_err:.3f}")
+    return out
+
+
+def main():
+    out = run()
+    # model accuracy in the paper's reported range
+    bcast_err = max(c.rel_error for c in out["bcast"])
+    assert bcast_err <= 0.21, bcast_err
+    for pattern in ("chain", "tree", "two_phase", "autogen"):
+        m = np.mean([c.rel_error for c in out["reduce"][pattern]])
+        assert m <= 0.35, (pattern, m)
+
+
+if __name__ == "__main__":
+    main()

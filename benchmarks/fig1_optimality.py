@@ -1,0 +1,54 @@
+"""Fig. 1: optimality ratios of 1D Reduce algorithms at P = 512.
+
+Paper claims: Auto-Gen <= 1.4x from the lower bound across all input
+sizes; Two-Phase <= 2.4x; each prior fixed pattern up to ~5.9x off for
+some B.  This benchmark recomputes the exact ratios (same DPs as the
+paper) and prints per-pattern maxima.
+"""
+
+from __future__ import annotations
+
+from repro.core import patterns as pat
+from repro.core.autogen import compute_tables, t_autogen
+from repro.core.lowerbound import compute_lb_energy, t_lower_bound
+from benchmarks.common import cycles_to_us, emit
+
+P = 512
+B_VALUES = [2 ** k for k in range(0, 18)]
+
+
+def run(verbose: bool = True):
+    tables = compute_tables(P)
+    lb = compute_lb_energy(P)
+    ratios = {"star": [], "chain": [], "tree": [], "two_phase": [],
+              "autogen": []}
+    for b in B_VALUES:
+        t_lb = t_lower_bound(P, b, lb_table=lb)
+        ratios["star"].append(pat.t_star(P, b) / t_lb)
+        ratios["chain"].append(pat.t_chain(P, b) / t_lb)
+        ratios["tree"].append(pat.t_tree(P, b) / t_lb)
+        ratios["two_phase"].append(pat.t_two_phase(P, b) / t_lb)
+        ta, _ = t_autogen(P, b, tables=tables)
+        ratios["autogen"].append(ta / t_lb)
+
+    maxima = {k: max(v) for k, v in ratios.items()}
+    if verbose:
+        for name, mx in sorted(maxima.items()):
+            emit(f"fig1/optimality_ratio_max/{name}", 0.0, f"{mx:.3f}")
+        # reference point: Auto-Gen absolute time at B=1024
+        ta, _ = t_autogen(P, 1024, tables=compute_tables(P))
+        emit("fig1/autogen_B1024_cycles", cycles_to_us(ta), f"{ta:.0f}cyc")
+    return {"ratios": ratios, "maxima": maxima, "b_values": B_VALUES}
+
+
+def main():
+    res = run()
+    assert res["maxima"]["autogen"] <= 1.4 + 1e-6, res["maxima"]
+    assert res["maxima"]["two_phase"] <= 2.4 + 1e-6, res["maxima"]
+    worst_fixed = max(res["maxima"][k] for k in
+                      ("star", "chain", "tree", "two_phase"))
+    emit("fig1/worst_fixed_ratio", 0.0, f"{worst_fixed:.2f}")
+
+
+if __name__ == "__main__":
+    main()

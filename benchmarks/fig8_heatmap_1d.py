@@ -1,0 +1,51 @@
+"""Fig. 8: best 1D AllReduce algorithm per (vector length, PE count) and
+speedup of the best over Chain+Bcast (the vendor baseline)."""
+
+from __future__ import annotations
+
+from repro.core import patterns as pat
+from repro.core.selector import best_allreduce, heatmap_1d_allreduce
+from benchmarks.common import emit
+
+B_VALUES = [2 ** k for k in range(0, 18, 2)]
+P_VALUES = [2 ** k for k in range(2, 10)]
+
+
+def run(verbose: bool = True):
+    grid = heatmap_1d_allreduce(B_VALUES, P_VALUES)
+    best_speedup = 0.0
+    arg = None
+    for i, b in enumerate(B_VALUES):
+        for j, p in enumerate(P_VALUES):
+            vendor = pat.t_allreduce("chain", p, b)
+            best = best_allreduce(p, b, include_autogen=False)
+            sp = vendor / best.predicted_cycles
+            if sp > best_speedup:
+                best_speedup, arg = sp, (b, p, best.name)
+    if verbose:
+        hdr = "B\\P," + ",".join(str(p) for p in P_VALUES)
+        print("# " + hdr)
+        for i, b in enumerate(B_VALUES):
+            print(f"# {b}," + ",".join(grid[i]))
+        emit("fig8/max_speedup_over_vendor", 0.0,
+             f"{best_speedup:.2f}x@B={arg[0]},P={arg[1]},{arg[2]}")
+    return {"grid": grid, "best_speedup": best_speedup, "arg": arg}
+
+
+def main():
+    res = run()
+    grid = res["grid"]
+    # Fig. 8: the ring region exists but is confined to the
+    # contention-dominated corner (large B); at P=512 the multicast-free
+    # reduce-then-broadcast always beats ring (Sec. 8.6: the depth cost
+    # 2(P-1) rounds kills ring on the WSE).
+    for i, b in enumerate(B_VALUES):
+        for j, p in enumerate(P_VALUES):
+            if grid[i][j] == "ring":
+                assert b >= 16 * p, (b, p)
+    last_col = [grid[i][-1] for i in range(len(B_VALUES))]  # P = 512
+    assert "ring" not in last_col, last_col
+
+
+if __name__ == "__main__":
+    main()

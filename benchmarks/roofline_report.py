@@ -1,0 +1,84 @@
+"""Roofline report: aggregates var/dryrun/*.json into the per-(arch x
+shape x mesh) table consumed by EXPERIMENTS.md Dry-run / Roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+ART_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "var", "dryrun"))
+
+
+def load_records(tag: str | None = None) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is None and r.get("tag"):
+            continue
+        if tag is not None and r.get("tag") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s |"
+            " dominant | useful-FLOPs | roofline frac | HBM/chip GB |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                        " skipped |  |  |  |  |  |  |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                        " FAILED |  |  |  |  |  |  |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['dominant']} "
+            f"| {t['useful_flops_ratio']:.3f} "
+            f"| {t['roofline_fraction']:.3f} | {hbm:.1f} |")
+    return "\n".join(rows)
+
+
+def run(verbose: bool = True):
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    if verbose:
+        emit("roofline/cells_ok", 0.0, str(len(ok)))
+        emit("roofline/cells_skipped_by_rule", 0.0, str(len(skipped)))
+        emit("roofline/cells_failed", 0.0, str(len(failed)))
+        if ok:
+            worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+            emit("roofline/worst_fraction", 0.0,
+                 f"{worst['roofline']['roofline_fraction']:.3f}"
+                 f"@{worst['arch']}/{worst['shape']}/{worst['mesh']}")
+            coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+            emit("roofline/most_collective_bound", 0.0,
+                 f"{coll['roofline']['collective_s']:.4f}s"
+                 f"@{coll['arch']}/{coll['shape']}/{coll['mesh']}")
+    return {"ok": ok, "skipped": skipped, "failed": failed}
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

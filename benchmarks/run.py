@@ -1,0 +1,48 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us at the CS-2's 850 MHz for
+cycle-denominated results; 0.0 for pure ratios)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig1_optimality, fig8_heatmap_1d, fig10_heatmap_2d,
+                        fig11_scaling_B, fig12_scaling_P, fig13_2d,
+                        grad_sync_bench, roofline_report, table_model_error,
+                        table_speedup, tpu_collectives)
+
+ALL = [
+    ("fig1_optimality", fig1_optimality),
+    ("fig8_heatmap_1d", fig8_heatmap_1d),
+    ("fig10_heatmap_2d", fig10_heatmap_2d),
+    ("fig11_scaling_B", fig11_scaling_B),
+    ("fig12_scaling_P", fig12_scaling_P),
+    ("fig13_2d", fig13_2d),
+    ("table_speedup", table_speedup),
+    ("table_model_error", table_model_error),
+    ("tpu_collectives", tpu_collectives),
+    ("grad_sync_bench", grad_sync_bench),
+    ("roofline_report", roofline_report),
+]
+
+
+def main() -> None:
+    failures = []
+    for name, mod in ALL:
+        print(f"# === {name} ===")
+        try:
+            mod.main()
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

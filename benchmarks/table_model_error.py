@@ -1,0 +1,64 @@
+"""Model-accuracy table: Eq. (1) predictions vs the wavelet-level fabric
+simulator (small instances, exact) and vs the flow simulator (512-PE
+scale) -- the reproduction analogue of the paper's <4%-35% error claims.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import patterns as pat
+from repro.core.autogen import autogen_tree, compute_tables
+from repro.core.schedule import (binary_tree, chain_tree, star_tree,
+                                 two_phase_tree)
+from repro.simulator.fabric import simulate_reduce_fabric
+from repro.simulator.flow import simulate_reduce_tree
+from repro.simulator.runner import compare_reduce
+from benchmarks.common import emit
+
+FAB_PS = (4, 8, 16)
+FAB_BS = (8, 64, 256)
+FLOW_BS = [2 ** k for k in range(0, 17, 2)]
+
+
+def run(verbose: bool = True):
+    res = {}
+    # fabric (wavelet-level) vs model, small scale
+    makers = {"chain": (chain_tree, pat.t_chain),
+              "tree": (binary_tree, pat.t_tree),
+              "two_phase": (two_phase_tree, pat.t_two_phase),
+              "star": (star_tree, pat.t_star)}
+    for name, (mk, model_fn) in makers.items():
+        errs = []
+        for p in FAB_PS:
+            for b in FAB_BS:
+                fab = simulate_reduce_fabric(mk(p), b).cycles
+                errs.append(abs(model_fn(p, b) - fab) / fab)
+        res[f"fabric/{name}"] = float(np.mean(errs))
+
+    # flow vs model at P=512
+    tables = compute_tables(512)
+    for pattern in ("star", "chain", "tree", "two_phase", "autogen"):
+        errs = [compare_reduce(pattern, 512, b, tables=tables).rel_error
+                for b in FLOW_BS]
+        res[f"flow512/{pattern}"] = float(np.mean(errs))
+
+    if verbose:
+        for name, err in sorted(res.items()):
+            emit(f"model_error/{name}", 0.0, f"{err:.3f}")
+    return res
+
+
+def main():
+    res = run()
+    # paper range: per-pattern mean relative error 12-35%; ours must stay
+    # under the top of that band (pipelined patterns are far tighter)
+    for k, v in res.items():
+        if "star" in k:
+            assert v <= 0.50, (k, v)   # star overhead: paper's Sec 8.5 outlier
+        else:
+            assert v <= 0.35, (k, v)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Beyond-paper: the model-driven selector re-parameterized for TPU v5e
+ICI, applied to gradient-bucket AllReduce (the framework's DP sync path).
+
+Shows (a) the selection regions over (bucket bytes, axis size), (b) the
+ppermute round counts per algorithm (the depth analogue on ICI), and
+(c) a bucket plan for a real model's gradient tree.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.collectives.api import select_algorithm
+from repro.core.autogen import autogen_tree, compute_tables
+from repro.core.schedule import chain_tree, binary_tree, two_phase_tree
+from benchmarks.common import emit
+
+SIZES = [2 ** k for k in range(10, 31, 2)]   # 1 KiB .. 1 GiB
+AXES = (8, 16, 32, 256)
+
+
+def run(verbose: bool = True):
+    regions = {p: [select_algorithm(n, p) for n in SIZES] for p in AXES}
+    rounds = {}
+    for p in (16, 32):
+        rounds[f"chain_p{p}"] = len(chain_tree(p).to_rounds())
+        rounds[f"tree_p{p}"] = len(binary_tree(p).to_rounds())
+        rounds[f"two_phase_p{p}"] = len(two_phase_tree(p).to_rounds())
+        tables = compute_tables(p)
+        rounds[f"autogen_small_p{p}"] = len(
+            autogen_tree(p, 1, tables=tables).to_rounds())
+        rounds[f"autogen_big_p{p}"] = len(
+            autogen_tree(p, 1 << 20, tables=tables).to_rounds())
+
+    if verbose:
+        for p in AXES:
+            print(f"# axis={p}: " + ",".join(regions[p]))
+        for k, v in sorted(rounds.items()):
+            emit(f"tpu/rounds/{k}", 0.0, str(v))
+
+    # gradient bucket plan for a small real model
+    from repro.configs import get_config
+    from repro.models import param_specs
+    cfg = get_config("minicpm-2b")
+    specs = param_specs(cfg)
+    total_bytes = sum(s.size * 4 for s in jax.tree.leaves(specs))
+    plan = []
+    off = 0
+    bucket = 32 << 20
+    while off < total_bytes:
+        b = min(bucket, total_bytes - off)
+        plan.append(select_algorithm(b, 16))
+        off += b
+    if verbose:
+        emit("tpu/minicpm_grad_buckets", 0.0,
+             f"{len(plan)}x32MiB,algos={sorted(set(plan))}")
+    return {"regions": regions, "rounds": rounds, "plan": plan}
+
+
+def main():
+    res = run()
+    # latency-bound small buckets pick low-depth trees; large buckets pick
+    # bandwidth-optimal patterns
+    for p in AXES:
+        assert res["regions"][p][0] in ("tree", "two_phase", "star")
+    assert res["regions"][8][-1] in ("ring", "chain")
+    # round counts: tree is log-depth, chain is linear
+    assert res["rounds"]["tree_p16"] < res["rounds"]["chain_p16"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Collective playground: reproduce the paper's figures interactively.
+
+Prints the Fig. 8 heatmap (best 1D AllReduce per (B, P)), the Fig. 1
+optimality ratios, and the vendor-speedup table -- all from the model +
+simulator, no hardware needed.
+
+Run:  PYTHONPATH=src python examples/collective_playground.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import fig1_optimality, fig8_heatmap_1d, table_speedup
+
+
+def main():
+    print("=== Fig. 1: optimality ratios (P=512) ===")
+    res = fig1_optimality.run()
+    for name, mx in sorted(res["maxima"].items()):
+        print(f"  {name:10s} max ratio vs lower bound: {mx:.2f}x")
+
+    print("\n=== Fig. 8: best AllReduce per (B, P) ===")
+    fig8_heatmap_1d.run()
+
+    print("\n=== Vendor speedups (simulated CS-2) ===")
+    table_speedup.run()
+
+
+if __name__ == "__main__":
+    main()

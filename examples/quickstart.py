@@ -1,0 +1,54 @@
+"""Quickstart: the paper in five minutes on a laptop.
+
+1. Evaluate the performance model for every Reduce pattern.
+2. Generate an Auto-Gen tree and run it on the wavelet-level fabric
+   simulator (our CS-2 stand-in) -- predictions vs "measurement".
+3. Use the same machinery as a TPU gradient AllReduce: the selector
+   picks the algorithm per bucket size.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import patterns as pat
+from repro.core.autogen import autogen_tree, compute_tables, t_autogen
+from repro.core.lowerbound import compute_lb_energy, t_lower_bound
+from repro.simulator.fabric import simulate_reduce_fabric
+from repro.simulator.flow import simulate_reduce_tree
+from repro.collectives.api import select_algorithm
+
+
+def main():
+    p, b = 32, 64
+    print(f"=== Reduce of a {b}-element vector across {p} PEs ===")
+    print(f"model: star      = {pat.t_star(p, b):8.1f} cycles")
+    print(f"model: chain     = {pat.t_chain(p, b):8.1f} cycles")
+    print(f"model: tree      = {pat.t_tree(p, b):8.1f} cycles")
+    print(f"model: two-phase = {pat.t_two_phase(p, b):8.1f} cycles")
+
+    tables = compute_tables(p)
+    t_pred, (d, c) = t_autogen(p, b, tables=tables)
+    lb = t_lower_bound(p, b, lb_table=compute_lb_energy(p))
+    print(f"model: AUTO-GEN  = {t_pred:8.1f} cycles  (depth<={d}, "
+          f"contention<={c})")
+    print(f"lower bound      = {lb:8.1f} cycles "
+          f"(auto-gen is {t_pred / lb:.2f}x away)")
+
+    tree = autogen_tree(p, b, tables=tables)
+    flow = simulate_reduce_tree(tree, b).cycles
+    data = np.random.default_rng(0).standard_normal((p, b))
+    fab = simulate_reduce_fabric(tree, b, data=data)
+    print(f"\nflow simulator   = {flow:8.1f} cycles "
+          f"(model err {abs(t_pred - flow) / flow:.1%})")
+    print(f"fabric simulator = {fab.cycles:8d} cycles, sum exact: "
+          f"{np.allclose(fab.root_sum, data.sum(0))}")
+
+    print("\n=== Same model, TPU v5e ICI constants (gradient buckets) ===")
+    for nbytes in (64 << 10, 4 << 20, 256 << 20):
+        algo = select_algorithm(nbytes, 16)
+        print(f"bucket {nbytes >> 10:8d} KiB on a 16-chip axis -> {algo}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Batched serving example: continuous batched decode over a reduced
+MiniCPM with the production serving loop.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Sharded, preemption-safe checkpointing.
+
+Layout:  <dir>/step_<n>/
+            shard_<proc>.npz     flattened param/opt leaves (this process)
+            COMMIT               written last; a step without COMMIT is
+                                 treated as torn and ignored on restore
+
+Atomicity: each shard is written to a temp file and os.replace'd; COMMIT
+is only written after every shard fsyncs.  ``keep`` bounds disk usage.
+Restore picks the newest committed step -- the restart path a preempted
+or failed node takes (see repro.runtime.fault_tolerance).
+
+An optional background thread makes saves asynchronous so the train loop
+doesn't stall on I/O (checkpoint/compute overlap).
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+_TMP_COUNTER = itertools.count()
+
+import jax
+import numpy as np
+
+
+import ml_dtypes
+
+# npz cannot round-trip ml_dtypes (bfloat16, fp8); encode them as raw
+# uint views + a sidecar dtype map.
+_RAW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+try:  # fp8 families, if present in this ml_dtypes
+    _RAW_DTYPES["float8_e4m3fn"] = (ml_dtypes.float8_e4m3fn, np.uint8)
+    _RAW_DTYPES["float8_e5m2"] = (ml_dtypes.float8_e5m2, np.uint8)
+except AttributeError:  # pragma: no cover
+    pass
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    dtypes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        name = arr.dtype.name
+        if name in _RAW_DTYPES:
+            arr = arr.view(_RAW_DTYPES[name][1])
+            dtypes[key] = name
+        flat[key] = arr
+    flat["__dtypes__"] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8).copy()
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    dtypes = {}
+    if "__dtypes__" in flat:
+        dtypes = json.loads(bytes(flat["__dtypes__"]).decode())
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if key in dtypes:
+            arr = arr.view(_RAW_DTYPES[dtypes[key]][0])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"leaf {key}: checkpoint shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 process_index: int = 0, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.proc = process_index
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def committed_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "COMMIT")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree, metadata: Optional[dict] = None,
+             block: bool = True) -> None:
+        if self.async_save and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(step, tree, metadata))
+            self._thread.start()
+        else:
+            self._save_sync(step, tree, metadata)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _save_sync(self, step: int, tree, metadata: Optional[dict]) -> None:
+        sdir = self._step_dir(step)
+        os.makedirs(sdir, exist_ok=True)
+        flat = _flatten(tree)
+        tmp = os.path.join(
+            sdir, f".tmp_shard_{self.proc}.{next(_TMP_COUNTER)}.npz")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(sdir, f"shard_{self.proc}.npz"))
+        if metadata is not None:
+            with open(os.path.join(sdir, "metadata.json"), "w") as f:
+                json.dump(metadata, f)
+        # single-controller commit (process 0)
+        if self.proc == 0:
+            with open(os.path.join(sdir, "COMMIT"), "w") as f:
+                f.write("ok")
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.committed_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def restore(self, template, step: Optional[int] = None
+                ) -> Tuple[int, Any, Optional[dict]]:
+        steps = self.committed_steps()
+        if not steps:
+            raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        step = steps[-1] if step is None else step
+        sdir = self._step_dir(step)
+        with np.load(os.path.join(sdir, f"shard_{self.proc}.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        meta = None
+        mpath = os.path.join(sdir, "metadata.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                meta = json.load(f)
+        return step, tree, meta
+
+
+__all__ = ["CheckpointManager"]

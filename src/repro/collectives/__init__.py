@@ -1,0 +1,9 @@
+from repro.collectives.api import (allreduce, allreduce_inside,
+                                   reduce_to_root, select_algorithm)
+from repro.collectives.overlap import (bucket_algorithm_plan,
+                                       bucketed_allreduce)
+from repro.collectives import shardmap_impl
+
+__all__ = ["allreduce", "allreduce_inside", "reduce_to_root",
+           "select_algorithm", "bucket_algorithm_plan",
+           "bucketed_allreduce", "shardmap_impl"]

@@ -1,0 +1,130 @@
+"""Bucketed gradient AllReduce with compute/comm overlap + compression.
+
+Distributed-optimization layer for pure-DP training (params replicated on
+the data/pod axes):
+
+* **Bucketing**: gradients are flattened and packed into fixed-byte
+  buckets; each bucket is AllReduced independently, so the paper's
+  selector picks the right algorithm *per bucket size* -- small buckets
+  ride low-depth trees, big ones ride ring/chain (exactly the Fig. 8
+  heatmap in action).
+* **Overlap**: buckets are reduced in reverse-layer order, letting XLA's
+  latency-hiding scheduler overlap each bucket's ppermute chain with the
+  remaining backward compute (on TPU the collectives are async).
+* **Compression**: optional bf16 reduction with fp32 error feedback
+  (residual carried between steps), halving the collective term.
+* **Two-phase hierarchy**: on the multi-pod mesh the reduction runs the
+  paper's Two-Phase structure natively -- intra-pod phase over 'data',
+  inter-pod phase over 'pod'.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.collectives.api import allreduce_inside, select_algorithm
+from repro.core.model import TPU_V5E_AXIS
+
+DEFAULT_BUCKET_BYTES = 32 * 1024 * 1024
+
+
+def _flatten_to_buckets(tree, bucket_bytes: int):
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    n_per = max(1, bucket_bytes // 4)
+    buckets = []
+    i = 0
+    while i < flat.size:
+        buckets.append(flat[i:i + n_per])
+        i += n_per
+    return buckets, (treedef, sizes, [l.shape for l in leaves],
+                     [l.dtype for l in leaves])
+
+
+def _unflatten(buckets: List[jax.Array], meta) -> Any:
+    treedef, sizes, shapes, dtypes = meta
+    flat = jnp.concatenate(buckets)
+    leaves = []
+    off = 0
+    for size, shape, dtype in zip(sizes, shapes, dtypes):
+        leaves.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
+                       algorithm: str = "auto",
+                       bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                       compress: bool = False,
+                       error_feedback: Optional[Any] = None,
+                       mean: bool = True):
+    """AllReduce a gradient pytree over DP axes.
+
+    Multi-axis (('pod','data')) runs hierarchically: reduce over 'data'
+    within each pod, then over 'pod' -- the Two-Phase pattern at pod
+    granularity.  Returns (reduced_grads, new_error_feedback).
+    """
+    if error_feedback is not None:
+        grads = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error_feedback)
+    buckets, meta = _flatten_to_buckets(grads, bucket_bytes)
+
+    def reduce_bucket(b):
+        v = b
+        if compress:
+            v = v.astype(jnp.bfloat16)
+        for ax in reversed(axes):        # intra-pod first, then cross-pod
+            v = allreduce_inside(v, ax, algorithm=algorithm)
+        return v.astype(jnp.float32)
+
+    spec = P()
+    fn = shard_map(lambda *bs: tuple(reduce_bucket(b) for b in bs),
+                   mesh=mesh, in_specs=spec, out_specs=spec,
+                   check_rep=False)
+    # reverse order: last layers' buckets first (they finish backward
+    # earliest -> overlap with remaining backward compute)
+    reduced = list(fn(*buckets[::-1]))[::-1]
+
+    n = 1
+    for ax in axes:
+        n *= mesh.shape[ax]
+    if mean:
+        reduced = [b / n for b in reduced]
+
+    new_ef = None
+    if compress:
+        # error feedback: residual between fp32 sum and bf16-compressed sum
+        exact = [b * (n if mean else 1) for b in buckets]
+        new_ef_flat = [e - r * (n if mean else 1)
+                       for e, r in zip(exact, reduced)]
+        new_ef = _unflatten(new_ef_flat, meta)
+    out = _unflatten(reduced, meta)
+    return out, new_ef
+
+
+def bucket_algorithm_plan(grads, mesh: Mesh, axis: str = "data",
+                          bucket_bytes: int = DEFAULT_BUCKET_BYTES
+                          ) -> List[Tuple[int, str]]:
+    """What the selector would pick per bucket (introspection/reporting)."""
+    leaves = jax.tree.leaves(grads)
+    total = sum(l.size * 4 for l in leaves)
+    p = mesh.shape[axis]
+    plan = []
+    off = 0
+    while off < total:
+        b = min(bucket_bytes, total - off)
+        plan.append((b, select_algorithm(b, p)))
+        off += b
+    return plan
+
+
+__all__ = ["bucketed_allreduce", "bucket_algorithm_plan",
+           "DEFAULT_BUCKET_BYTES"]

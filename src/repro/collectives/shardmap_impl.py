@@ -1,0 +1,226 @@
+"""The paper's Reduce/AllReduce algorithms as JAX shard_map programs.
+
+Per-device SPMD ports of Sec. 5/6 over one mesh axis, built from
+``jax.lax.ppermute`` steps (the TPU analogue of one wavelet hop -- see
+DESIGN.md: multicast does not exist on ICI, so Broadcast becomes
+log-depth doubling and the paper's pipelining maps to chunked schedules).
+
+Every function runs *inside* shard_map (axis_name bound); the public
+entry points live in api.py.  All algorithms compute the exact same sum
+as ``jax.lax.psum`` (validated in tests/test_collectives_multidev.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _axis_size(axis: str) -> int:
+    return lax.axis_size(axis)
+
+
+def _axis_index(axis: str):
+    return lax.axis_index(axis)
+
+
+def _masked_accumulate(x, received, is_receiver):
+    return jnp.where(is_receiver, x + received, x)
+
+
+# ---------------------------------------------------------------------- #
+# fixed patterns (Sec. 5) -- reduce to device 0 of the axis
+# ---------------------------------------------------------------------- #
+def chain_reduce(x: jax.Array, axis: str) -> jax.Array:
+    """Pipelined chain: device i receives i+1's partial, adds, passes on.
+    P-1 ppermute steps; result lands on device 0 (others hold garbage
+    partials, as on the WSE)."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    acc = x
+    for t in range(p - 1):
+        # device (p-1-t) has a complete suffix partial; send left
+        src = p - 1 - t
+        shifted = lax.ppermute(acc, axis, [(src, src - 1)])
+        acc = jnp.where(idx == src - 1, acc + shifted, acc)
+    return acc
+
+
+def tree_reduce(x: jax.Array, axis: str) -> jax.Array:
+    """Recursive halving (Sec. 5.3): log2 P rounds of pairwise sends."""
+    p = _axis_size(axis)
+    assert p & (p - 1) == 0, f"tree_reduce needs power-of-two axis, got {p}"
+    idx = _axis_index(axis)
+    acc = x
+    step = 1
+    while step < p:
+        pairs = [(s + step, s) for s in range(0, p, 2 * step)]
+        shifted = lax.ppermute(acc, axis, pairs)
+        is_recv = (idx % (2 * step)) == 0
+        acc = jnp.where(is_recv, acc + shifted, acc)
+        step *= 2
+    return acc
+
+
+def two_phase_reduce(x: jax.Array, axis: str, group: int | None = None
+                     ) -> jax.Array:
+    """Two-Phase (Sec. 5.4): chain within groups of S, then chain over the
+    group leaders.  The natural hierarchical reduce; with axis=('pod',...)
+    flattened this is pod-local + cross-pod."""
+    p = _axis_size(axis)
+    if group is None:
+        group = max(1, round(p ** 0.5))
+    group = min(group, p)
+    idx = _axis_index(axis)
+    n_groups = -(-p // group)
+    acc = x
+
+    # phase 1: chain within each group towards its leader (g*group)
+    for t in range(group - 1):
+        pairs = []
+        for g in range(n_groups):
+            src = g * group + (group - 1 - t)
+            if src < p and src > g * group:
+                pairs.append((src, src - 1))
+        if not pairs:
+            continue
+        shifted = lax.ppermute(acc, axis, pairs)
+        dsts = jnp.array([d for _, d in pairs])
+        is_recv = jnp.isin(idx, dsts)
+        acc = jnp.where(is_recv, acc + shifted, acc)
+
+    # phase 2: chain over leaders
+    for t in range(n_groups - 1):
+        src = (n_groups - 1 - t) * group
+        dst = src - group
+        shifted = lax.ppermute(acc, axis, [(src, dst)])
+        acc = jnp.where(idx == dst, acc + shifted, acc)
+    return acc
+
+
+def star_reduce(x: jax.Array, axis: str) -> jax.Array:
+    """Star (Sec. 5.1): everyone sends to the root.  On ICI this is an
+    all-gather-to-one; modeled as P-1 serialized ppermutes (the root's
+    injection bandwidth is the contention term)."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    acc = x
+    for t in range(p - 1):
+        shifted = lax.ppermute(x, axis, [(t + 1, 0)])
+        acc = jnp.where(idx == 0, acc + shifted, acc)
+    return acc
+
+
+def broadcast(x: jax.Array, axis: str, root: int = 0) -> jax.Array:
+    """Log-depth doubling broadcast (ICI has no multicast; DESIGN.md)."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    have = (idx == root)
+    acc = jnp.where(have, x, jnp.zeros_like(x))
+    step = 1
+    while step < p:
+        pairs = [((root + s) % p, (root + s + step) % p)
+                 for s in range(step)]
+        shifted = lax.ppermute(acc, axis, pairs)
+        offset = (idx - root) % p
+        is_new = (offset >= step) & (offset < 2 * step)
+        acc = jnp.where(is_new, shifted, acc)
+        step *= 2
+    return acc
+
+
+# ---------------------------------------------------------------------- #
+# ring AllReduce (Sec. 6.2): reduce-scatter + all-gather
+# ---------------------------------------------------------------------- #
+def ring_allreduce(x: jax.Array, axis: str) -> jax.Array:
+    """Classic bidirectional-mapping ring (paper Fig. 7), chunked so each
+    round moves B/P elements."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    n = x.shape[0]
+    pad = (-n) % p
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    chunks = xp.reshape((p, -1) + x.shape[1:])
+    right = [(i, (i + 1) % p) for i in range(p)]
+
+    # reduce-scatter: after P-1 rounds, device i owns the full sum of
+    # chunk (i+1) % p
+    def rs_step(t, ch):
+        send_idx = (idx - t) % p
+        sent = jnp.take(ch, send_idx, axis=0)
+        recv = lax.ppermute(sent, axis, right)
+        recv_idx = (idx - t - 1) % p
+        upd = jnp.take(ch, recv_idx, axis=0) + recv
+        return ch.at[recv_idx].set(upd)
+
+    chunks = lax.fori_loop(0, p - 1, rs_step, chunks)
+
+    # all-gather: circulate the owned chunks
+    def ag_step(t, ch):
+        send_idx = (idx + 1 - t) % p
+        sent = jnp.take(ch, send_idx, axis=0)
+        recv = lax.ppermute(sent, axis, right)
+        recv_idx = (idx - t) % p
+        return ch.at[recv_idx].set(recv)
+
+    chunks = lax.fori_loop(0, p - 1, ag_step, chunks)
+    out = chunks.reshape((-1,) + x.shape[1:])
+    return out[:n] if pad else out
+
+
+# ---------------------------------------------------------------------- #
+# schedule-driven executor: runs any ReduceTree (Auto-Gen) as rounds of
+# disjoint ppermutes (the paper's code generation, retargeted to ICI)
+# ---------------------------------------------------------------------- #
+def schedule_reduce(x: jax.Array, axis: str,
+                    rounds: Sequence[Sequence[Tuple[int, int]]]) -> jax.Array:
+    idx = _axis_index(axis)
+    acc = x
+    for sends in rounds:
+        pairs = list(sends)
+        shifted = lax.ppermute(acc, axis, pairs)
+        dsts = jnp.array([d for _, d in pairs])
+        is_recv = jnp.isin(idx, dsts)
+        acc = jnp.where(is_recv, acc + shifted, acc)
+    return acc
+
+
+def schedule_reduce_pipelined(x: jax.Array, axis: str,
+                              rounds: Sequence[Sequence[Tuple[int, int]]],
+                              n_chunks: int = 4) -> jax.Array:
+    """The paper's *pipelining* at tile granularity: the vector is split
+    into chunks and the round schedule is software-pipelined -- round r
+    operates on chunk c while round r+1 already moves chunk c-1, so a
+    depth-D tree costs D + n_chunks - 1 ppermute waves of B/n_chunks
+    bytes instead of D waves of B bytes.  On ICI the per-wave latency
+    term is amortized exactly like the WSE's per-wavelet pipeline
+    (DESIGN.md: wavelets -> chunked ppermute)."""
+    idx = _axis_index(axis)
+    n = x.shape[0]
+    pad = (-n) % n_chunks
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    chunks = list(xp.reshape((n_chunks, -1) + x.shape[1:]))
+    n_rounds = len(rounds)
+    # wavefront schedule: at wave w, chunk c undergoes round w - c
+    for wave in range(n_rounds + n_chunks - 1):
+        for c in range(n_chunks):
+            r = wave - c
+            if 0 <= r < n_rounds:
+                pairs = list(rounds[r])
+                shifted = lax.ppermute(chunks[c], axis, pairs)
+                dsts = jnp.array([d for _, d in pairs])
+                is_recv = jnp.isin(idx, dsts)
+                chunks[c] = jnp.where(is_recv, chunks[c] + shifted,
+                                      chunks[c])
+    out = jnp.stack(chunks).reshape((-1,) + x.shape[1:])
+    return out[:n] if pad else out
+
+
+__all__ = [
+    "chain_reduce", "tree_reduce", "two_phase_reduce", "star_reduce",
+    "broadcast", "ring_allreduce", "schedule_reduce",
+]

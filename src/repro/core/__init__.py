@@ -1,0 +1,16 @@
+"""Core library: the paper's performance model, algorithms, and bounds."""
+
+from repro.core.model import CostTerms, Fabric, TPU_V5E_AXIS, WSE2
+from repro.core import patterns, schedule
+from repro.core.autogen import autogen_tree, compute_tables, t_autogen
+from repro.core.lowerbound import compute_lb_energy, t_lower_bound
+from repro.core.selector import (best_allreduce, best_reduce,
+                                 optimality_ratios, predict_allreduce,
+                                 predict_reduce)
+
+__all__ = [
+    "CostTerms", "Fabric", "WSE2", "TPU_V5E_AXIS", "patterns", "schedule",
+    "autogen_tree", "compute_tables", "t_autogen", "compute_lb_energy",
+    "t_lower_bound", "best_allreduce", "best_reduce", "optimality_ratios",
+    "predict_allreduce", "predict_reduce",
+]

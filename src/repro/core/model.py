@@ -1,0 +1,128 @@
+"""Spatial performance model for wafer-scale (and torus-ICI) fabrics.
+
+Implements the paper's Eq. (1):
+
+    T = max(C, E/N + L) + (2*T_R + 1) * D
+
+over the four spatial cost terms
+
+    D  depth       -- longest chain of sequentially dependent messages
+    L  distance    -- hops travelled along the critical path
+    E  energy      -- total element-hops injected into the fabric
+    C  contention  -- max elements received (or sent) by any single PE
+
+with N the number of links usable by the pattern and T_R the ramp
+(processor<->router) latency.  All costs are in elements == cycles
+(1 element/link/cycle on the WSE).
+
+Two parameterizations are provided:
+
+* ``WSE2`` -- the Cerebras CS-2 constants from the paper (T_R = 2).
+* ``TPUv5eAxis`` -- re-parameterization of the same model for a TPU v5e ICI
+  axis, used by the TPU collective selector (see DESIGN.md: hardware
+  adaptation).  There, "cycles" are nanoseconds, a "link" is an ICI link,
+  and T_R models per-hop SerDes/launch latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Hardware constants that parameterize the spatial model."""
+
+    name: str
+    t_r: float          # ramp latency (cycles) each way between PE and router
+    store_cost: float   # cycles to store/add one received element
+    link_bw: float = 1.0  # elements per cycle per link (WSE: 1)
+
+    @property
+    def per_depth_cost(self) -> float:
+        """Cost charged per unit of depth: down-ramp + up-ramp + store."""
+        return 2.0 * self.t_r + self.store_cost
+
+    @property
+    def hop_pipeline_cost(self) -> float:
+        """Pipeline latency added per chain hop: link + ramps + add."""
+        return 2.0 * self.t_r + 2.0
+
+
+#: The paper's CS-2 parameterization (T_R measured to be 2, Sec. 2.2).
+WSE2 = Fabric(name="wse2", t_r=2.0, store_cost=1.0)
+
+#: A TPU v5e ICI axis viewed through the same model.  Units: one "element"
+#: is one 512-byte ICI flit-group; one "cycle" is the time to push it over
+#: one 45 GB/s usable link (~11.4 ns); t_r models the ~1 us per-launch
+#: collective-permute latency expressed in those cycles.
+TPU_V5E_AXIS = Fabric(name="tpu_v5e_axis", t_r=88.0, store_cost=1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTerms:
+    """Spatial cost decomposition of one collective pattern instance."""
+
+    depth: float
+    distance: float
+    energy: float
+    contention: float
+    links: float
+    label: str = ""
+
+    def cycles(self, fabric: Fabric = WSE2) -> float:
+        """Paper Eq. (1)."""
+        if self.links <= 0:
+            bandwidth_term = self.distance
+        else:
+            bandwidth_term = self.energy / self.links + self.distance
+        return (
+            max(self.contention, bandwidth_term)
+            + fabric.per_depth_cost * self.depth
+        )
+
+    def dominant_term(self, fabric: Fabric = WSE2) -> str:
+        """Name of the largest contributor (for analysis/reporting)."""
+        bandwidth = self.energy / self.links if self.links > 0 else 0.0
+        parts = {
+            "contention": self.contention,
+            "bandwidth": bandwidth,
+            "distance": self.distance,
+            "depth": fabric.per_depth_cost * self.depth,
+        }
+        return max(parts, key=parts.get)
+
+
+def validate_positive(p: int, b: int) -> None:
+    if p < 1:
+        raise ValueError(f"need at least one PE, got P={p}")
+    if b < 1:
+        raise ValueError(f"need vector length >= 1, got B={b}")
+
+
+def is_power_of_two(x: int) -> bool:
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+def log2i(x: int) -> int:
+    if not is_power_of_two(x):
+        raise ValueError(f"{x} is not a power of two")
+    return x.bit_length() - 1
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+__all__ = [
+    "Fabric",
+    "WSE2",
+    "TPU_V5E_AXIS",
+    "CostTerms",
+    "validate_positive",
+    "is_power_of_two",
+    "log2i",
+    "ceil_div",
+]

@@ -1,0 +1,184 @@
+"""Closed-form pattern costs from the paper (Lemmas 4.1, 5.1-5.4, 6.1, 7.1).
+
+Every function returns the model estimate (Eq. 1) in cycles.  Functions are
+deliberately kept in one-to-one correspondence with the paper's lemmas so
+that the unit tests can assert our generic ``ReduceTree.cost_terms`` +
+``CostTerms.cycles`` machinery reproduces each lemma exactly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.model import CostTerms, Fabric, WSE2, ceil_div, log2i
+from repro.core import schedule as sched
+
+
+# ---------------------------------------------------------------------- #
+# 1D primitives
+# ---------------------------------------------------------------------- #
+def t_message(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Sending a B-vector across a row of P PEs: T = B + P + 2*T_R."""
+    terms = CostTerms(depth=1, distance=p - 1, energy=b * (p - 1),
+                      contention=b, links=max(p - 1, 1), label="message")
+    return terms.cycles(fabric)
+
+
+def t_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Flooding broadcast == message (Lemma 4.1), thanks to multicast."""
+    return t_message(p, b, fabric)
+
+
+# ---------------------------------------------------------------------- #
+# 1D Reduce patterns
+# ---------------------------------------------------------------------- #
+def t_star(p: int, b: int, fabric: Fabric = WSE2, refined: bool = True) -> float:
+    """Star Reduce (Lemma 5.1).  ``refined`` uses the paper's closer look:
+    the star forms a perfect pipeline at the root, so
+    T = B*(P-1) + 2*T_R + 1 (no congestion term)."""
+    if p == 1:
+        return 0.0
+    if refined:
+        return b * (p - 1) + 2 * fabric.t_r + fabric.store_cost
+    terms = CostTerms(depth=1, distance=p - 1,
+                      energy=b * p * (p - 1) / 2.0,
+                      contention=b * (p - 1), links=p - 1, label="star")
+    return terms.cycles(fabric)
+
+
+def t_chain(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Chain Reduce (Lemma 5.2): T = B + (2*T_R + 2)(P - 1)."""
+    if p == 1:
+        return 0.0
+    return b + fabric.hop_pipeline_cost * (p - 1)
+
+
+def t_tree(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Binary-tree Reduce (Lemma 5.3), P a power of two."""
+    if p == 1:
+        return 0.0
+    lg = log2i(p)
+    bandwidth = b * p / (2.0 * (p - 1)) * lg + (p - 1)
+    return max(b * lg, bandwidth) + fabric.per_depth_cost * lg
+
+
+def t_two_phase(p: int, b: int, fabric: Fabric = WSE2,
+                s: Optional[int] = None) -> float:
+    """Two-Phase Reduce (Lemma 5.4).  With S = sqrt(P) (P = S^2):
+    T <= max(2B, 2B - 2B/sqrt(P) + P) + (2*sqrt(P) - 2)(2*T_R + 1).
+    For general S we evaluate the cost terms directly (same derivation)."""
+    if p == 1:
+        return 0.0
+    if s is None:
+        s = max(1, round(math.sqrt(p)))
+    s = min(s, p)
+    g = ceil_div(p, s)
+    depth = (s - 1) + (g - 1)
+    energy = (s - 1) * b * g + s * b * (g - 1)
+    contention = 2 * b if (g > 1 and s > 1) else b
+    terms = CostTerms(depth=depth, distance=p - 1, energy=energy,
+                      contention=contention, links=p,
+                      label=f"two_phase(S={s})")
+    return terms.cycles(fabric)
+
+
+def t_autogen_tree(tree: "sched.ReduceTree", b: int,
+                   fabric: Fabric = WSE2) -> float:
+    """Model cost of an arbitrary ordered reduction tree (Sec. 5.5)."""
+    return tree.cost_terms(b).cycles(fabric)
+
+
+REDUCE_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
+    "star": t_star,
+    "chain": t_chain,
+    "tree": t_tree,
+    "two_phase": t_two_phase,
+}
+
+
+# ---------------------------------------------------------------------- #
+# 1D AllReduce patterns
+# ---------------------------------------------------------------------- #
+def t_reduce_then_broadcast(t_reduce: float, p: int, b: int,
+                            fabric: Fabric = WSE2) -> float:
+    """Naive AllReduce (Sec. 6.1): T = T_reduce + T_bcast."""
+    return t_reduce + t_broadcast(p, b, fabric)
+
+
+def t_allreduce(pattern: str, p: int, b: int, fabric: Fabric = WSE2) -> float:
+    if pattern == "ring":
+        return t_ring_allreduce(p, b, fabric)
+    return t_reduce_then_broadcast(
+        REDUCE_PATTERNS[pattern](p, b, fabric), p, b, fabric)
+
+
+def t_ring_allreduce(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Ring AllReduce mapped onto the mesh row (Lemma 6.1):
+    T = 2(P-1)B/P + 4P - 6 + 2(P-1)(2*T_R + 1)."""
+    if p == 1:
+        return 0.0
+    contention = 2.0 * (p - 1) * b / p
+    bandwidth = 2.0 * (p - 1) * b / p  # E/N with E = 2(P-1) rounds * links
+    distance = 2.0 * (2 * p - 3)
+    depth = 2.0 * (p - 1)
+    return (max(contention, bandwidth + distance)
+            + fabric.per_depth_cost * depth)
+
+
+ALLREDUCE_PATTERNS = ("star", "chain", "tree", "two_phase", "ring")
+
+
+# ---------------------------------------------------------------------- #
+# 2D collectives (Sec. 7); grid is M rows x N cols, root at (0, 0)
+# ---------------------------------------------------------------------- #
+def t_broadcast_2d(m: int, n: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Lemma 7.1: T = B + M + N - 2 + 2*T_R + 1."""
+    p = m * n
+    terms = CostTerms(depth=1, distance=(m - 1) + (n - 1),
+                      energy=b * (p - 1), contention=b,
+                      links=max(p - 1, 1), label="bcast2d")
+    return terms.cycles(fabric)
+
+
+def t_xy_reduce(pattern: str, m: int, n: int, b: int,
+                fabric: Fabric = WSE2) -> float:
+    """X-Y Reduce (Sec. 7.2): 1D reduce along rows, then along column 0."""
+    fn = REDUCE_PATTERNS[pattern]
+    return fn(n, b, fabric) + fn(m, b, fabric)
+
+
+def t_snake_reduce(m: int, n: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Snake Reduce (Sec. 7.3): chain over all M*N PEs, unit hops."""
+    return t_chain(m * n, b, fabric)
+
+
+def t_xy_allreduce(pattern: str, m: int, n: int, b: int,
+                   fabric: Fabric = WSE2) -> float:
+    """AllReduce on x then y (Sec. 7.4, first variant)."""
+    return t_allreduce(pattern, n, b, fabric) + t_allreduce(pattern, m, b, fabric)
+
+
+def t_reduce_bcast_2d(pattern: str, m: int, n: int, b: int,
+                      fabric: Fabric = WSE2) -> float:
+    """AllReduce as 2D Reduce + 2D Broadcast (Sec. 7.4, second variant)."""
+    if pattern == "snake":
+        red = t_snake_reduce(m, n, b, fabric)
+    else:
+        red = t_xy_reduce(pattern, m, n, b, fabric)
+    return red + t_broadcast_2d(m, n, b, fabric)
+
+
+def t_lower_bound_2d(m: int, n: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Lemma 7.2: T >= max(B, B/8 + M + N - 1) + 2*T_R + 1."""
+    return (max(float(b), b / 8.0 + m + n - 1)
+            + fabric.per_depth_cost * 1.0)
+
+
+__all__ = [
+    "t_message", "t_broadcast", "t_star", "t_chain", "t_tree",
+    "t_two_phase", "t_autogen_tree", "t_reduce_then_broadcast",
+    "t_allreduce", "t_ring_allreduce", "t_broadcast_2d", "t_xy_reduce",
+    "t_snake_reduce", "t_xy_allreduce", "t_reduce_bcast_2d",
+    "t_lower_bound_2d", "REDUCE_PATTERNS", "ALLREDUCE_PATTERNS",
+]

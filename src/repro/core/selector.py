@@ -1,0 +1,127 @@
+"""Model-driven algorithm selection (the paper's Figs. 1, 8, 10).
+
+Given (B, P) -- and a fabric parameterization -- evaluate every pattern
+under the performance model and pick the winner.  This is the mechanism the
+paper uses both to choose collectives and to generate Fig. 8/10 heatmaps,
+and the mechanism our TPU collective layer reuses with ICI constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import patterns as pat
+from repro.core.autogen import AutoGenTables, compute_tables, t_autogen
+from repro.core.lowerbound import compute_lb_energy, t_lower_bound
+from repro.core.model import Fabric, WSE2
+
+
+@dataclasses.dataclass
+class Selection:
+    name: str
+    predicted_cycles: float
+    all_predictions: Dict[str, float]
+
+
+def predict_reduce(p: int, b: int, fabric: Fabric = WSE2,
+                   include_autogen: bool = True,
+                   tables: Optional[AutoGenTables] = None) -> Dict[str, float]:
+    preds = {name: fn(p, b, fabric) for name, fn in pat.REDUCE_PATTERNS.items()
+             if name != "tree" or (p & (p - 1)) == 0}
+    if include_autogen:
+        preds["autogen"], _ = t_autogen(p, b, fabric, tables)
+    return preds
+
+
+def best_reduce(p: int, b: int, fabric: Fabric = WSE2,
+                include_autogen: bool = True,
+                tables: Optional[AutoGenTables] = None) -> Selection:
+    preds = predict_reduce(p, b, fabric, include_autogen, tables)
+    name = min(preds, key=preds.get)
+    return Selection(name, preds[name], preds)
+
+
+def predict_allreduce(p: int, b: int, fabric: Fabric = WSE2,
+                      include_autogen: bool = True,
+                      tables: Optional[AutoGenTables] = None
+                      ) -> Dict[str, float]:
+    preds: Dict[str, float] = {}
+    for name in pat.ALLREDUCE_PATTERNS:
+        if name == "tree" and (p & (p - 1)) != 0:
+            continue
+        preds[name] = pat.t_allreduce(name, p, b, fabric)
+    if include_autogen:
+        t_red, _ = t_autogen(p, b, fabric, tables)
+        preds["autogen"] = pat.t_reduce_then_broadcast(t_red, p, b, fabric)
+    return preds
+
+
+def best_allreduce(p: int, b: int, fabric: Fabric = WSE2,
+                   include_autogen: bool = True,
+                   tables: Optional[AutoGenTables] = None) -> Selection:
+    preds = predict_allreduce(p, b, fabric, include_autogen, tables)
+    name = min(preds, key=preds.get)
+    return Selection(name, preds[name], preds)
+
+
+# ---------------------------------------------------------------------- #
+# heatmaps (Figs. 8 and 10): best fixed algorithm per (B, P) cell
+# ---------------------------------------------------------------------- #
+def heatmap_1d_allreduce(b_values: Sequence[int], p_values: Sequence[int],
+                         fabric: Fabric = WSE2) -> List[List[str]]:
+    grid = []
+    for b in b_values:
+        row = []
+        for p in p_values:
+            row.append(best_allreduce(p, b, fabric,
+                                      include_autogen=False).name)
+        grid.append(row)
+    return grid
+
+
+def heatmap_2d_allreduce(b_values: Sequence[int], side_values: Sequence[int],
+                         fabric: Fabric = WSE2) -> List[List[str]]:
+    """Best fixed 2D AllReduce (X-Y pattern + bcast, or snake + bcast)."""
+    grid = []
+    for b in b_values:
+        row = []
+        for side in side_values:
+            preds: Dict[str, float] = {}
+            for name in ("star", "chain", "tree", "two_phase"):
+                if name == "tree" and (side & (side - 1)) != 0:
+                    continue
+                preds[f"xy_{name}"] = pat.t_reduce_bcast_2d(
+                    name, side, side, b, fabric)
+            preds["snake"] = pat.t_reduce_bcast_2d("snake", side, side, b,
+                                                   fabric)
+            row.append(min(preds, key=preds.get))
+        grid.append(row)
+    return grid
+
+
+def optimality_ratios(p: int, b_values: Sequence[int], fabric: Fabric = WSE2,
+                      tables: Optional[AutoGenTables] = None,
+                      lb_table=None) -> Dict[str, List[float]]:
+    """Fig. 1: pattern cost / lower bound, per vector length."""
+    if tables is None:
+        tables = compute_tables(p)
+    if lb_table is None:
+        lb_table = compute_lb_energy(p)
+    out: Dict[str, List[float]] = {}
+    for b in b_values:
+        lb = max(t_lower_bound(p, b, fabric, lb_table), 1e-9)
+        preds = predict_reduce(p, b, fabric, include_autogen=True,
+                               tables=tables)
+        for name, t in preds.items():
+            out.setdefault(name, []).append(t / lb)
+    return out
+
+
+__all__ = [
+    "Selection", "predict_reduce", "best_reduce", "predict_allreduce",
+    "best_allreduce", "heatmap_1d_allreduce", "heatmap_2d_allreduce",
+    "optimality_ratios",
+]

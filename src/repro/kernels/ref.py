@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def multi_add_ref(stacked: jax.Array) -> jax.Array:
+    """K-way fused accumulate oracle: sum over the leading axis.
+
+    ``stacked``: [K, N] partials -> [N].  Accumulation in float32.
+    """
+    return jnp.sum(stacked.astype(jnp.float32), axis=0).astype(stacked.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """Attention oracle: [B, H, S, D] x [B, Hkv, S, D] -> [B, H, S, D].
+
+    Supports GQA (H a multiple of Hkv), causal masking, and an optional
+    sliding window (RecurrentGemma-style local attention).
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    qf = q.astype(jnp.float32) / jnp.sqrt(d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def selective_scan_ref(dt: jax.Array, x: jax.Array, b: jax.Array,
+                       c: jax.Array, a: jax.Array, h0: jax.Array):
+    """Oracle for the fused Mamba scan: plain sequential recurrence.
+
+    dt/x: [B, S, D]; b/c: [B, S, N]; a: [D, N]; h0: [B, D, N].
+    """
+    dt32 = dt.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+
+    def step(h, inputs):
+        dt_t, x_t, b_t, c_t = inputs
+        a_bar = jnp.exp(dt_t[:, :, None] * a32)          # [B, D, N]
+        b_bar = (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        h = a_bar * h + b_bar
+        y_t = jnp.sum(h * c_t[:, None, :], axis=-1)      # [B, D]
+        return h, y_t
+
+    xs = (jnp.moveaxis(dt32, 1, 0), jnp.moveaxis(x32, 1, 0),
+          jnp.moveaxis(b32, 1, 0), jnp.moveaxis(c32, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
+
+
+__all__ = ["multi_add_ref", "flash_attention_ref", "selective_scan_ref"]

@@ -1,0 +1,10 @@
+"""Launch layer: mesh, dry-run, roofline, train/serve drivers.
+
+NOTE: repro.launch.dryrun must be imported/run as the FIRST jax-touching
+module of its process (it sets XLA_FLAGS); this package init deliberately
+does not import it.
+"""
+
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+
+__all__ = ["make_debug_mesh", "make_production_mesh"]

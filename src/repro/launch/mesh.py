@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A TPU v5e pod is modeled as a 16 x 16 = 256-chip (data, model) mesh; the
+multi-pod deployment adds a leading "pod" axis (2 x 16 x 16 = 512 chips).
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Small mesh for CPU integration tests (8 virtual devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+__all__ = ["make_production_mesh", "make_debug_mesh"]

@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+The dry-run lowers against these -- weak-type-correct, shardable, no
+device allocation.  ``step_kind`` decides what a cell lowers:
+
+  train_4k      -> train_step(state, batch)
+  prefill_32k   -> prefill(params, batch)
+  decode_32k / long_500k -> decode_step(params, cache, batch)
+
+Whisper conventions (backbone-only spec, see DESIGN.md): prefill runs the
+encoder over ``seq_len`` frames with a 448-token decoder prompt; decode
+uses a ``seq_len`` self-attention cache and a 1500-frame cross cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as tf
+
+WHISPER_DECODER_PROMPT = 448
+WHISPER_DECODE_CROSS_LEN = 1500
+
+
+def _token_spec(b: int, s: int):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        n_img = cfg.frontend_tokens
+        specs["soft_emb"] = jax.ShapeDtypeStruct(
+            (b, n_img, cfg.d_model), cfg.activation_dtype)
+        s_text = s - n_img
+    else:
+        s_text = s
+    specs["tokens"] = _token_spec(b, s_text)
+    specs["labels"] = _token_spec(b, s_text)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), cfg.activation_dtype)
+    return specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), cfg.activation_dtype)
+        specs["tokens"] = _token_spec(b, WHISPER_DECODER_PROMPT)
+        return specs
+    if cfg.frontend == "vision":
+        n_img = cfg.frontend_tokens
+        specs["soft_emb"] = jax.ShapeDtypeStruct(
+            (b, n_img, cfg.d_model), cfg.activation_dtype)
+        specs["tokens"] = _token_spec(b, s - n_img)
+        return specs
+    specs["tokens"] = _token_spec(b, s)
+    return specs
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    enc_len = WHISPER_DECODE_CROSS_LEN if cfg.family == "encdec" else 0
+    fn = functools.partial(tf.init_cache, cfg, b, s, enc_len)
+    return jax.eval_shape(fn)
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    return {"tokens": _token_spec(shape.global_batch, 1)}
+
+
+__all__ = [
+    "train_input_specs", "prefill_input_specs", "decode_cache_specs",
+    "decode_input_specs", "WHISPER_DECODER_PROMPT",
+    "WHISPER_DECODE_CROSS_LEN",
+]

@@ -1,0 +1,128 @@
+"""Training driver: data pipeline -> sharded train loop -> checkpoints,
+with preemption safety and straggler telemetry wired in.
+
+CPU-scale usage (see examples/train_100m.py for the end-to-end run):
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b \
+        --reduced --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a real fleet the same driver runs under `jax.distributed.initialize`
+with the production mesh; the dry-run (repro.launch.dryrun) is the
+scale-proof for those configurations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+from repro.models import init_params
+from repro.models.frontend import audio_frames, vision_patches
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import PreemptionGuard, StragglerDetector
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+
+def build_batch(cfg, data_batch, key):
+    batch = {"tokens": jnp.asarray(data_batch["tokens"]),
+             "labels": jnp.asarray(data_batch["labels"])}
+    b, s = batch["tokens"].shape
+    if cfg.family == "encdec":
+        batch["frames"] = audio_frames(key, cfg, b, s)
+    if cfg.frontend == "vision":
+        batch["soft_emb"] = vision_patches(key, cfg, b)
+    return batch
+
+
+def run(arch: str, steps: int, batch_size: int, seq_len: int,
+        reduced: bool = True, ckpt_dir: str | None = None,
+        ckpt_every: int = 50, lr: float = 3e-4, microbatches: int = 1,
+        log_every: int = 10, resume: bool = True):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    schedule = "wsd" if arch == "minicpm-2b" else "cosine"
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 1),
+                          total_steps=steps, schedule=schedule)
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    state = init_train_state(params)
+    data = SyntheticLMDataset(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=batch_size))
+
+    start_step = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2, async_save=True)
+        if resume and mgr.committed_steps():
+            start_step, state, meta = mgr.restore(state)
+            print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      microbatches=microbatches))
+    guard = PreemptionGuard(install=True)
+    stragglers = StragglerDetector()
+    host = f"host{jax.process_index()}"
+    losses = []
+    t_start = time.time()
+    for step in range(start_step, steps):
+        t0 = time.time()
+        batch = build_batch(cfg, data.batch(step), jax.random.fold_in(key,
+                                                                      step))
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        stragglers.record(host, time.time() - t0)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"dt={time.time() - t0:.2f}s", flush=True)
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, state, metadata={"loss": loss},
+                     block=False)
+        if guard.should_stop:
+            print("[train] preemption requested: checkpointing and "
+                  "exiting")
+            if mgr:
+                mgr.save(step + 1, state, metadata={"loss": loss})
+            break
+    if mgr:
+        mgr.save(steps, state, metadata={"loss": losses[-1]})
+        mgr.wait()
+    print(f"[train] done: {len(losses)} steps in "
+          f"{time.time() - t_start:.1f}s; "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    run(args.arch, args.steps, args.batch, args.seq, reduced=args.reduced,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
+        microbatches=args.microbatches)
+
+
+if __name__ == "__main__":
+    main()

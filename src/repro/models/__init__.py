@@ -1,0 +1,11 @@
+"""Model zoo: functional JAX implementations of the assigned families."""
+
+from repro.models import frontend, layers, moe, rglru, scan_utils, ssm
+from repro.models.transformer import (decode_step, forward_train, init_cache,
+                                      init_params, param_specs, prefill)
+
+__all__ = [
+    "frontend", "layers", "moe", "rglru", "scan_utils", "ssm",
+    "decode_step", "forward_train", "init_cache", "init_params",
+    "param_specs", "prefill",
+]

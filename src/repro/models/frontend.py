@@ -1,0 +1,31 @@
+"""Modality frontend stubs.
+
+Per the assignment, ``[audio]``/``[vlm]`` entries specify the transformer
+BACKBONE only; the modality frontend is a stub whose outputs --
+precomputed frame/patch embeddings -- are produced here (for tests and
+examples) and described by ``input_specs`` (for the dry-run).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def audio_frames(key, cfg: ArchConfig, batch: int, seq_len: int):
+    """Stub for Whisper's conv1d-over-mel frontend: [B, S, D] frame
+    embeddings."""
+    return (jax.random.normal(key, (batch, seq_len, cfg.d_model)) * 0.02
+            ).astype(cfg.activation_dtype)
+
+
+def vision_patches(key, cfg: ArchConfig, batch: int):
+    """Stub for LLaVA-NeXT anyres tiling + projector: [B, T_img, D]
+    soft-token embeddings."""
+    return (jax.random.normal(key, (batch, cfg.frontend_tokens, cfg.d_model))
+            * 0.02).astype(cfg.activation_dtype)
+
+
+__all__ = ["audio_frames", "vision_patches"]

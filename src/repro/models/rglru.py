@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma), TPU-adapted.
+
+Gated linear recurrence h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t); block-diagonal gate
+projections (per-head) as in the Griffin paper.  Runs through the same
+chunked associative scan as the SSM block; decode state is [B, lru] plus
+a conv shift register -- constant in context length, hence the
+long_500k-capable hybrid family.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import shard_hint
+from repro.models.scan_utils import chunked_linear_scan
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array   # [B, K-1, lru]
+    h: jax.Array      # [B, lru]
+
+
+def _block_diag(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [B, S, lru] -> per-head block-diagonal projection.
+    w: [heads, bh, bh] with heads * bh == lru."""
+    heads, bh, _ = w.shape
+    b, s, lru = x.shape
+    xh = x.reshape(b, s, heads, bh)
+    return jnp.einsum("bshi,hij->bshj", xh, w).reshape(b, s, lru)
+
+
+def rglru_block(x: jax.Array, p: dict, *, chunk: int = 128,
+                state: RGLRUState | None = None,
+                single_step: bool = False) -> Tuple[jax.Array, RGLRUState]:
+    """x: [B, S, D].  Params:
+      w_x [D, lru], w_y [D, lru], conv_w [K, lru],
+      w_a [heads, bh, bh], w_i [heads, bh, bh], lam [lru], out [lru, D].
+    """
+    b, s, d = x.shape
+    lru = p["lam"].shape[0]
+
+    xb = shard_hint(x @ p["w_x"], "dp", None, "model")   # [B, S, lru]
+    yb = shard_hint(x @ p["w_y"], "dp", None, "model")
+    conv_prefix = state.conv if state is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], conv_prefix)
+
+    r = jax.nn.sigmoid(_block_diag(xb, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(xb, p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                          # [B, S, lru]
+    gated = i * xb.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    bb = beta * gated
+
+    h0 = state.h if state is not None else jnp.zeros((b, lru), jnp.float32)
+    if single_step:
+        assert s == 1
+        h_new = a[:, 0] * h0 + bb[:, 0]
+        h_all = h_new[:, None]
+    else:
+        h_all, h_new = chunked_linear_scan(a, bb, h0, chunk=chunk)
+
+    out = (h_all * jax.nn.gelu(yb.astype(jnp.float32))).astype(x.dtype)
+    return shard_hint(out @ p["out"], "dp", None, None), RGLRUState(
+        conv=new_conv, h=h_new)
+
+
+def init_rglru_params(key, d_model: int, lru: int, heads: int, d_conv: int,
+                      dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    bh = lru // heads
+    scale = d_model ** -0.5
+    return {
+        "w_x": (jax.random.normal(ks[0], (d_model, lru)) * scale).astype(dtype),
+        "w_y": (jax.random.normal(ks[1], (d_model, lru)) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (d_conv, lru)) * 0.1).astype(dtype),
+        "w_a": (jax.random.normal(ks[3], (heads, bh, bh)) * bh ** -0.5
+                ).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (heads, bh, bh)) * bh ** -0.5
+                ).astype(dtype),
+        "lam": jnp.linspace(0.5, 3.0, lru, dtype=jnp.float32),
+        "out": (jax.random.normal(ks[5], (lru, d_model)) * lru ** -0.5
+                ).astype(dtype),
+    }
+
+
+__all__ = ["rglru_block", "init_rglru_params", "RGLRUState"]

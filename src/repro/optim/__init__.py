@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, apply_updates,
+                               global_norm, init_state, lr_at)
+
+__all__ = ["AdamWConfig", "AdamWState", "apply_updates", "global_norm",
+           "init_state", "lr_at"]

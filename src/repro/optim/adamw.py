@@ -1,0 +1,124 @@
+"""AdamW with sharded states + LR schedules (cosine, WSD, linear).
+
+Pure JAX (no optax dependency).  Optimizer state inherits the parameter
+sharding tree, so FSDP keeps m/v sharded across the data axis -- the
+ZeRO-style memory split the big configs need.
+
+WSD (warmup-stable-decay) is MiniCPM's schedule (arXiv:2404.06395) and is
+selected by that architecture's training recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+    master: Any = None   # fp32 master copy (mixed-precision training)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_weights: bool = False   # fp32 master params (bf16 training);
+                                   # masters inherit the param sharding
+    schedule: str = "cosine"       # cosine | wsd | linear | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_fraction: float = 0.1    # WSD: fraction of steps in decay phase
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        mult = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = 1.0 - cfg.decay_fraction
+        in_decay = jnp.clip((t - decay_start) / cfg.decay_fraction, 0.0, 1.0)
+        mult = 1.0 - (1.0 - cfg.min_lr_ratio) * in_decay
+    elif cfg.schedule == "linear":
+        mult = 1.0 - (1.0 - cfg.min_lr_ratio) * t
+    else:
+        mult = jnp.asarray(1.0)
+    return cfg.lr * warm * mult
+
+
+def init_state(params, master_weights: bool = False) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = None
+    if master_weights:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32),
+                      master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState
+                  ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    use_master = state.master is not None
+
+    def upd(p, g, m, v, w32):
+        """p: model-dtype param; w32: fp32 master (== p when disabled)."""
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * w32
+        w32_new = w32 - lr * step
+        return w32_new.astype(p.dtype), m2, v2, w32_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_w = (jax.tree.leaves(state.master) if use_master
+              else [p.astype(jnp.float32) for p in flat_p])
+    new_p, new_m, new_v, new_w = [], [], [], []
+    for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w):
+        p2, m2, v2, w2 = upd(p, g, m, v, w)
+        new_p.append(p2), new_m.append(m2), new_v.append(v2)
+        new_w.append(w2)
+    params2 = jax.tree.unflatten(treedef, new_p)
+    state2 = AdamWState(
+        mu=jax.tree.unflatten(treedef, new_m),
+        nu=jax.tree.unflatten(treedef, new_v), count=count,
+        master=jax.tree.unflatten(treedef, new_w) if use_master else None)
+    return params2, state2, {"grad_norm": gnorm, "lr": lr}
+
+
+__all__ = ["AdamWConfig", "AdamWState", "init_state", "apply_updates",
+           "lr_at", "global_norm"]

@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                           PreemptionGuard,
+                                           StragglerDetector,
+                                           plan_elastic_remesh)
+
+__all__ = ["ElasticPlan", "HeartbeatMonitor", "PreemptionGuard",
+           "StragglerDetector", "plan_elastic_remesh"]

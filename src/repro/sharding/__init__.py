@@ -1,0 +1,8 @@
+from repro.sharding.rules import (ShardingPolicy, batch_sharding_specs,
+                                  cache_specs, for_mesh, labels_spec,
+                                  logits_spec, param_sharding_tree,
+                                  spec_for_param)
+
+__all__ = ["ShardingPolicy", "batch_sharding_specs", "cache_specs",
+           "for_mesh", "labels_spec", "logits_spec", "param_sharding_tree",
+           "spec_for_param"]

@@ -1,0 +1,231 @@
+"""Parallelism rules: DP / FSDP / TP / EP / SP as PartitionSpec trees.
+
+Mesh axes: ``("data", "model")`` single-pod (16 x 16) and
+``("pod", "data", "model")`` multi-pod (2 x 16 x 16).
+
+* TP ("model"): attention heads / FFN hidden / experts / SSM inner dim.
+* FSDP ("data"): every parameter's non-TP matrix dim is additionally
+  sharded over the data axis (ZeRO-3 style); optimizer states inherit.
+* DP ("pod","data"): batch dims of activations; gradients reduce over
+  these axes (reduce-scatter under FSDP; the paper's two-phase hierarchy
+  governs the pod-level stage -- see repro.collectives).
+* EP ("model"): MoE expert dim.
+* Replicated: norms, small vectors.
+
+Non-divisible dims (e.g. 56 heads over 16-way model axis, odd vocabs)
+are allowed: GSPMD pads.  The padding waste is visible in the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio and is one of the hillclimb levers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True              # shard params over the data axis too
+    data_axes: Tuple[str, ...] = ("data",)   # DP axes for activations
+    model_axis: str = "model"
+    fsdp_axis: Optional[str] = "data"
+    axis_sizes: Tuple[Tuple[str, int], ...] = (("data", 1), ("model", 1))
+    # hillclimb levers
+    shard_vocab_model: bool = True
+    replicate_small_below: int = 1 << 16  # params smaller than this stay
+                                          # replicated
+
+    def axis_size(self, axis) -> int:
+        sizes = dict(self.axis_sizes)
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= sizes.get(a, 1)
+            return n
+        return sizes.get(axis, 1)
+
+    def divides(self, axis, dim: int) -> bool:
+        n = self.axis_size(axis)
+        return n > 0 and dim % n == 0
+
+
+def for_mesh(mesh: Mesh, fsdp: bool = True) -> ShardingPolicy:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    sizes = tuple(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardingPolicy(fsdp=fsdp, data_axes=data_axes,
+                          fsdp_axis="data" if fsdp else None,
+                          axis_sizes=sizes)
+
+
+# last-key -> spec over the *trailing* dims (leading stacked dims -> None)
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("model", "fsdp"),
+    "head": ("fsdp", "model"),
+    "wq": ("fsdp", "model"), "wk": ("fsdp", "model"), "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    "x_wq": ("fsdp", "model"), "x_wk": ("fsdp", "model"),
+    "x_wv": ("fsdp", "model"), "x_wo": ("model", "fsdp"),
+    "wg": ("fsdp", "model"), "wu": ("fsdp", "model"), "wd": ("model", "fsdp"),
+    # router stays replicated: the shard_map EP path consumes it whole
+    # (3.7 MB on arctic -- negligible)
+    "eg": ("model", "fsdp", None), "eu": ("model", "fsdp", None),
+    "ed": ("model", None, "fsdp"),
+    "in_proj": ("fsdp", "model"),
+    "conv_w": (None, "model"),
+    "x_proj": ("model", None),
+    "dt_w": (None, "model"),
+    "dt_b": ("model",),
+    "a_log": ("model", None),
+    "d_skip": ("model",),
+    "out_proj": ("model", "fsdp"),
+    "w_x": ("fsdp", "model"), "w_y": ("fsdp", "model"),
+    "w_a": ("model", None, None), "w_i": ("model", None, None),
+    "lam": ("model",),
+    "out": ("model", "fsdp"),
+}
+
+
+def _resolve(axis: Optional[str], policy: ShardingPolicy) -> Optional[str]:
+    if axis == "fsdp":
+        return policy.fsdp_axis if policy.fsdp else None
+    if axis == "model":
+        return policy.model_axis
+    return axis
+
+
+def spec_for_param(path: Tuple[Any, ...], shape: Tuple[int, ...],
+                   policy: ShardingPolicy) -> P:
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = str(keys[-1]) if keys else ""
+    size = 1
+    for s in shape:
+        size *= s
+    rule = _PARAM_RULES.get(name)
+    if rule is None or size < policy.replicate_small_below:
+        return P()
+    if name == "embed" and not policy.shard_vocab_model:
+        rule = (None, "fsdp")
+    trailing = list(_resolve(a, policy) for a in rule)
+    lead = [None] * (len(shape) - len(trailing))
+    if len(trailing) > len(shape):     # e.g. vectors in reduced configs
+        trailing = trailing[-len(shape):]
+        lead = []
+    dims = lead + trailing
+    # divisibility: jit input shardings must divide evenly.  Drop axes
+    # that don't; for vocab-carrying params try combining remaining axes
+    # on the d_model dim instead (odd vocabs: minicpm, whisper).
+    for i, ax in enumerate(dims):
+        if ax is not None and not policy.divides(ax, shape[i]):
+            dims[i] = None
+            if name in ("embed", "head"):
+                other = 1 - (i - len(lead))  # the non-vocab trailing dim
+                j = len(lead) + other
+                combo = tuple(a for a in (dims[j], ax) if a is not None)
+                flat: list = []
+                for a in combo:
+                    flat.extend(a if isinstance(a, tuple) else (a,))
+                combo = tuple(dict.fromkeys(flat))
+                if combo and policy.divides(combo, shape[j]):
+                    dims[j] = combo if len(combo) > 1 else combo[0]
+    return P(*dims)
+
+
+def param_sharding_tree(params_or_specs, mesh: Mesh,
+                        policy: Optional[ShardingPolicy] = None):
+    """Map a params pytree (arrays or ShapeDtypeStructs) to NamedShardings."""
+    if policy is None:
+        policy = for_mesh(mesh)
+
+    def fn(path, leaf):
+        spec = spec_for_param(path, leaf.shape, policy)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(fn, params_or_specs)
+
+
+# ---------------------------------------------------------------------- #
+# activation / batch / cache specs
+# ---------------------------------------------------------------------- #
+def _dp_spec(policy: ShardingPolicy, batch_dim: int):
+    """Largest prefix of the DP axes that divides the batch dim."""
+    dp = policy.data_axes
+    while dp and not policy.divides(dp, batch_dim):
+        dp = dp[1:] if policy.divides(dp[1:], batch_dim) else dp[:-1]
+    if not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def batch_sharding_specs(policy: ShardingPolicy, batch_shapes: Dict[str, Any]
+                         ) -> Dict[str, P]:
+    """P(dp, None, ...) per batch entry, dropping DP when indivisible
+    (e.g. the global_batch=1 long_500k cell)."""
+    out: Dict[str, P] = {}
+    for k, v in batch_shapes.items():
+        shape = v.shape
+        dp = _dp_spec(policy, shape[0]) if shape else None
+        out[k] = P(dp, *([None] * (len(shape) - 1)))
+    return out
+
+
+def labels_spec(policy: ShardingPolicy) -> P:
+    dp = policy.data_axes
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return P(dp_spec, None)
+
+
+def _kv_cache_spec(policy: ShardingPolicy, shape) -> P:
+    """[L, B, S, KV, hd]: prefer kv-head TP; fall back to sequence
+    sharding (SP) when kv heads don't divide the model axis."""
+    m = policy.model_axis
+    _, b, s, kv, _ = shape
+    dp = _dp_spec(policy, b)
+    if policy.divides(m, kv):
+        return P(None, dp, None, m, None)
+    if policy.divides(m, s):
+        return P(None, dp, m, None, None)
+    return P(None, dp, None, None, None)
+
+
+def cache_specs(cfg: ArchConfig, policy: ShardingPolicy, cache_shapes):
+    """PartitionSpecs matching an init_cache pytree (shapes required for
+    divisibility decisions)."""
+    m = policy.model_axis
+    specs: Dict[str, P] = {}
+    for key, leaf in cache_shapes.items():
+        shape = leaf.shape
+        if key == "pos":
+            specs[key] = P()
+        elif key in ("k", "v", "enc_k", "enc_v"):
+            specs[key] = _kv_cache_spec(policy, shape)
+        elif key == "conv":       # [L, B, K-1, di]
+            dp = _dp_spec(policy, shape[1])
+            mm = m if policy.divides(m, shape[3]) else None
+            specs[key] = P(None, dp, None, mm)
+        elif key == "h":           # ssm [L,B,di,N] / hybrid [L,B,lru]
+            dp = _dp_spec(policy, shape[1])
+            mm = m if policy.divides(m, shape[2]) else None
+            specs[key] = P(*((None, dp, mm) + (None,) * (len(shape) - 3)))
+        else:
+            specs[key] = P(*([None] * len(shape)))
+    return specs
+
+
+def logits_spec(policy: ShardingPolicy) -> P:
+    dp = policy.data_axes
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return P(dp_spec, None, policy.model_axis)
+
+
+__all__ = [
+    "ShardingPolicy", "for_mesh", "spec_for_param", "param_sharding_tree",
+    "batch_specs", "labels_spec", "cache_specs", "logits_spec",
+]

@@ -1,0 +1,24 @@
+"""WSE fabric simulators: our deterministic stand-in for the CS-2.
+
+Two levels of fidelity:
+
+* ``flow``   -- stream-level event simulation over the Schedule IR;
+               exact for the serialized-receive / pipelined-last-child
+               execution semantics; scales to the full 512x512 grid.
+* ``fabric`` -- wavelet-level cycle simulation of routers, ramps, colors,
+               multicast and backpressure on small grids; used to validate
+               the flow simulator's assumptions (and the sums themselves).
+
+The paper notes (Sec. 1.4) that CS-2 PE programs are deterministic state
+machines that a cycle-accurate fabric simulator models faithfully; these
+modules play that role here.
+"""
+
+from repro.simulator.flow import (simulate_allreduce, simulate_broadcast,
+                                  simulate_reduce_tree, simulate_ring_allreduce)
+from repro.simulator import fabric, runner
+
+__all__ = [
+    "simulate_reduce_tree", "simulate_broadcast", "simulate_allreduce",
+    "simulate_ring_allreduce", "fabric", "runner",
+]

@@ -1,0 +1,8 @@
+from repro.train.state import (TrainState, abstract_train_state,
+                               init_train_state, train_state_shardings)
+from repro.train.step import (cross_entropy, loss_fn, make_decode_step,
+                              make_prefill_step, make_train_step)
+
+__all__ = ["TrainState", "abstract_train_state", "init_train_state",
+           "train_state_shardings", "cross_entropy", "loss_fn",
+           "make_decode_step", "make_prefill_step", "make_train_step"]

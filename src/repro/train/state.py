@@ -1,0 +1,49 @@
+"""TrainState pytree + sharding helpers."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.optim.adamw import AdamWState, init_state
+from repro.sharding.rules import ShardingPolicy, param_sharding_tree
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(params, master_weights: bool = False) -> TrainState:
+    return TrainState(params=params,
+                      opt=init_state(params, master_weights))
+
+
+def train_state_shardings(state_or_specs, mesh: Mesh,
+                          policy: ShardingPolicy | None = None) -> TrainState:
+    """Optimizer moments inherit each parameter's sharding."""
+    p_sh = param_sharding_tree(state_or_specs.params, mesh, policy)
+    has_master = getattr(state_or_specs.opt, "master", None) is not None
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(
+            mu=jax.tree.map(lambda s: s, p_sh),
+            nu=jax.tree.map(lambda s: s, p_sh),
+            count=NamedSharding(mesh, P()),
+            master=jax.tree.map(lambda s: s, p_sh) if has_master else None,
+        ),
+    )
+
+
+def abstract_train_state(cfg) -> TrainState:
+    """ShapeDtypeStruct TrainState (dry-run, no allocation)."""
+    from repro.models import param_specs
+    p = param_specs(cfg)
+    return jax.eval_shape(init_train_state, p)
+
+
+__all__ = ["TrainState", "init_train_state", "train_state_shardings",
+           "abstract_train_state"]

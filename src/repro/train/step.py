@@ -1,0 +1,121 @@
+"""Step builders: train (fwd+bwd+AdamW), prefill, decode.
+
+* loss: next-token cross entropy in fp32 (+ MoE load-balance aux);
+* remat: per-layer (scan-level) activation checkpointing, policy set in
+  the model;
+* microbatching: gradient accumulation via lax.scan over microbatch
+  slices (keeps the same global batch while bounding live activations);
+* gradient sync: under jit+GSPMD the partitioner inserts the reductions
+  implied by the shardings (reduce-scatter under FSDP).  The explicit
+  paper-collective DP path lives in repro.collectives.overlap.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWConfig, apply_updates
+from repro.train.state import TrainState
+
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [B, S, V] fp32; labels [B, S] int32.
+
+    The gold logit is extracted with a fused mask-reduce rather than
+    take_along_axis: a gather over the vocab-sharded axis would make
+    GSPMD all-gather the full logits; the mask-reduce keeps everything
+    local + one tiny [B, S] all-reduce."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    mask = vocab_ids == labels[..., None].astype(jnp.int32)
+    gold = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, remat: bool = True,
+            unroll: bool = False):
+    model_inputs = {k: v for k, v in batch.items() if k != "labels"}
+    logits, aux = tf.forward_train(params, cfg, model_inputs, remat=remat,
+                                   unroll=unroll)
+    ce = cross_entropy(logits, batch["labels"])
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1, remat: bool = True,
+                    unroll: bool = False
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                  Tuple[TrainState, Dict[str, jax.Array]]]:
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, remat=remat, unroll=unroll),
+        has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch=batch)
+        else:
+            mb = _split_microbatches(batch, microbatches)
+
+            def acc_step(carry, mb_i):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, batch=mb_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            if unroll:
+                # measurement mode: Python loop so HloCostAnalysis sees
+                # every microbatch (a scan body is counted once)
+                carry = (g0, 0.0)
+                for i in range(microbatches):
+                    carry, _ = acc_step(
+                        carry, jax.tree.map(lambda a: a[i], mb))
+                grads, loss = carry
+            else:
+                (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), mb)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+            metrics = {}
+        params, opt, opt_metrics = apply_updates(
+            opt_cfg, state.params, grads, state.opt)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return TrainState(params=params, opt=opt), out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, unroll: bool = False):
+    def prefill_step(params, batch):
+        return tf.prefill(params, cfg, batch, unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, unroll: bool = False):
+    def decode_step(params, cache, batch):
+        return tf.decode_step(params, cfg, cache, batch, unroll=unroll)
+    return decode_step
+
+
+__all__ = ["cross_entropy", "loss_fn", "make_train_step",
+           "make_prefill_step", "make_decode_step", "AUX_WEIGHT"]

@@ -1,0 +1,71 @@
+"""Multi-device collective correctness, via a subprocess with 8 virtual
+CPU devices (tests must not set xla_force_host_platform_device_count
+globally)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import functools, json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.collectives.api import allreduce_inside, select_algorithm
+from repro.collectives.overlap import bucketed_allreduce, bucket_algorithm_plan
+
+results = {}
+mesh = jax.make_mesh((8,), ("data",))
+x = jax.random.normal(jax.random.PRNGKey(0), (8, 96))
+vals = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+expected = np.tile(np.asarray(x).sum(0), (8, 1))
+
+for algo in ("psum", "chain", "tree", "two_phase", "star", "ring", "autogen", "autogen_pipelined", "auto"):
+    fn = shard_map(functools.partial(allreduce_inside, axis="data", algorithm=algo),
+                   mesh=mesh, in_specs=P("data", None), out_specs=P("data", None),
+                   check_rep=False)
+    out = np.asarray(jax.jit(fn)(vals))
+    results[f"allreduce_{algo}"] = bool(np.allclose(out, expected, rtol=1e-4, atol=1e-4))
+
+# 2-axis hierarchy (two-phase across pod x data)
+mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+v2 = jax.device_put(x, NamedSharding(mesh2, P(("pod", "data"), None)))
+def hier(v):
+    v = allreduce_inside(v, "data", algorithm="chain")
+    v = allreduce_inside(v, "pod", algorithm="chain")
+    return v
+fn2 = shard_map(hier, mesh=mesh2, in_specs=P(("pod", "data"), None),
+                out_specs=P(("pod", "data"), None), check_rep=False)
+out2 = np.asarray(jax.jit(fn2)(v2))
+results["hierarchical_two_phase"] = bool(np.allclose(out2, expected, rtol=1e-4, atol=1e-4))
+
+# bucketed allreduce with compression + error feedback
+grads = {"a": jnp.ones((1000,)) * 0.5, "b": jnp.full((64, 32), 2.0)}
+reduced, ef = bucketed_allreduce(grads, mesh, axes=("data",), algorithm="ring",
+                                 bucket_bytes=2048, compress=True,
+                                 error_feedback=jax.tree.map(jnp.zeros_like, grads))
+ok_a = bool(np.allclose(np.asarray(reduced["a"]), 0.5, rtol=1e-2))
+ok_b = bool(np.allclose(np.asarray(reduced["b"]), 2.0, rtol=1e-2))
+results["bucketed_compressed"] = ok_a and ok_b
+results["error_feedback_exists"] = ef is not None
+
+plan = bucket_algorithm_plan(grads, mesh, bucket_bytes=2048)
+results["plan_nonempty"] = len(plan) > 1
+print("JSON" + json.dumps(results))
+"""
+
+
+def test_collectives_on_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("JSON")][-1]
+    results = json.loads(line[4:])
+    for key, ok in results.items():
+        assert ok, (key, results)

@@ -1,0 +1,126 @@
+"""Unit tests: the paper's lemmas vs. our generic cost machinery."""
+
+import math
+
+import pytest
+
+from repro.core import patterns as pat
+from repro.core.model import WSE2, CostTerms, Fabric
+from repro.core.schedule import (binary_tree, chain_tree, snake_tree,
+                                 star_tree, two_phase_tree)
+
+
+PS = (2, 4, 8, 16, 64, 128)
+BS = (1, 16, 256, 4096)
+
+
+def test_message_formula():
+    # Lemma: T_MESSAGE = B + P + 2 T_R
+    for p in PS:
+        for b in BS:
+            assert pat.t_message(p, b) == pytest.approx(b + p + 2 * WSE2.t_r)
+
+
+def test_broadcast_equals_message():
+    # Lemma 4.1
+    for p in PS:
+        for b in BS:
+            assert pat.t_broadcast(p, b) == pat.t_message(p, b)
+
+
+def test_star_lemma_5_1():
+    for p in PS:
+        for b in BS:
+            tree_cost = star_tree(p).cost_terms(b).cycles()
+            formula = max(b * (p - 1), p / 2 * b + p - 1) + 2 * WSE2.t_r + 1
+            assert tree_cost == pytest.approx(formula)
+            # refined: perfect pipeline at the root
+            assert pat.t_star(p, b) == pytest.approx(
+                b * (p - 1) + 2 * WSE2.t_r + 1)
+
+
+def test_chain_lemma_5_2():
+    for p in PS:
+        for b in BS:
+            want = b + (2 * WSE2.t_r + 2) * (p - 1)
+            assert pat.t_chain(p, b) == pytest.approx(want)
+            assert chain_tree(p).cost_terms(b).cycles() == pytest.approx(want)
+
+
+def test_tree_lemma_5_3():
+    for p in PS:
+        lg = int(math.log2(p))
+        for b in BS:
+            want = (max(b * lg, b * p / (2 * (p - 1)) * lg + p - 1)
+                    + (2 * WSE2.t_r + 1) * lg)
+            assert pat.t_tree(p, b) == pytest.approx(want)
+            assert binary_tree(p).cost_terms(b).cycles() == pytest.approx(want)
+
+
+def test_two_phase_lemma_5_4():
+    # Lemma 5.4 is an upper bound (distance written as +P; ours is the
+    # exact P-1).  On square P: formula == tree cost, both within 1 of
+    # the lemma bound.
+    for s in (2, 4, 8, 16):
+        p = s * s
+        for b in BS:
+            bound = (max(2 * b, 2 * b - 2 * b / math.sqrt(p) + p)
+                     + (2 * math.sqrt(p) - 2) * (2 * WSE2.t_r + 1))
+            ours = pat.t_two_phase(p, b)
+            got = two_phase_tree(p, s).cost_terms(b, links=p).cycles()
+            assert got == pytest.approx(ours)
+            assert ours <= bound + 1e-6
+            assert ours >= bound - 1.0 - 1e-6
+
+
+def test_two_phase_formula_upper_bounds_tree_when_indivisible():
+    for p in (6, 10, 12, 20, 100):
+        s = max(1, round(p ** 0.5))
+        for b in BS:
+            got = two_phase_tree(p, s).cost_terms(b, links=p).cycles()
+            assert got <= pat.t_two_phase(p, b, s=s) + 1e-6
+
+
+def test_ring_lemma_6_1():
+    for p in PS:
+        for b in BS:
+            want = (2 * (p - 1) * b / p + 4 * p - 6
+                    + 2 * (p - 1) * (2 * WSE2.t_r + 1))
+            assert pat.t_ring_allreduce(p, b) == pytest.approx(want)
+
+
+def test_broadcast_2d_lemma_7_1():
+    for m, n in ((4, 4), (8, 16), (32, 32)):
+        for b in BS:
+            want = b + m + n - 2 + 2 * WSE2.t_r + 1
+            assert pat.t_broadcast_2d(m, n, b) == pytest.approx(want)
+
+
+def test_snake_is_chain_on_mn():
+    for m, n in ((4, 4), (8, 16)):
+        for b in BS:
+            assert pat.t_snake_reduce(m, n, b) == pat.t_chain(m * n, b)
+            tree = snake_tree(m, n)
+            assert tree.cost_terms(b).cycles() == pytest.approx(
+                pat.t_chain(m * n, b))
+
+
+def test_lower_bound_2d_lemma_7_2():
+    for m, n in ((4, 4), (16, 16), (512, 512)):
+        for b in BS:
+            want = max(b, b / 8 + m + n - 1) + 2 * WSE2.t_r + 1
+            assert pat.t_lower_bound_2d(m, n, b) == pytest.approx(want)
+
+
+def test_eq1_synthesis():
+    terms = CostTerms(depth=3, distance=10, energy=100, contention=7,
+                      links=5)
+    # max(C, E/N + L) + (2 T_R + 1) D
+    assert terms.cycles(WSE2) == pytest.approx(max(7, 100 / 5 + 10) + 5 * 3)
+    f = Fabric(name="x", t_r=1.0, store_cost=1.0)
+    assert terms.cycles(f) == pytest.approx(30 + 3 * 3)
+
+
+def test_dominant_term():
+    t = CostTerms(depth=1, distance=1, energy=1, contention=100, links=1)
+    assert t.dominant_term() == "contention"

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward/train step on CPU; output shapes + no NaNs (assignment
+requirement)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_configs, get_config, list_archs
+from repro.models import (decode_step, forward_train, init_params, prefill)
+from repro.models.frontend import audio_frames, vision_patches
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = audio_frames(key, cfg, B, S)
+    if cfg.frontend == "vision":
+        batch["soft_emb"] = vision_patches(key, cfg, B)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, aux = forward_train(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    state = init_train_state(params)
+    batch = _batch(cfg, key)
+    batch["labels"] = jax.random.randint(key, batch["tokens"].shape, 0,
+                                         cfg.vocab_size)
+    step = make_train_step(cfg, AdamWConfig(warmup_steps=1, total_steps=10))
+    state2, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    before = jax.tree.leaves(state.params)[3]
+    after = jax.tree.leaves(state2.params)[3]
+    assert not np.allclose(np.asarray(before, np.float32),
+                           np.asarray(after, np.float32))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_consistency(arch):
+    """decode_step(prefill(x[:-1])) logits == forward(x) last-position
+    logits (KV-cache correctness)."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    full_logits, _ = forward_train(params, cfg, batch)
+
+    prompt = dict(batch, tokens=batch["tokens"][:, :-1])
+    _, cache = prefill(params, cfg, prompt)
+    step_logits, cache2 = decode_step(params, cfg, cache,
+                                      {"tokens": batch["tokens"][:, -1:]})
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+    if cfg.family == "ssm":
+        # exact: recurrent state carries everything
+        np.testing.assert_allclose(np.asarray(step_logits[:, 0]),
+                                   np.asarray(full_logits[:, -1]),
+                                   rtol=2e-2, atol=2e-2)
+    elif cfg.family == "dense" and cfg.frontend != "vision":
+        np.testing.assert_allclose(np.asarray(step_logits[:, 0]),
+                                   np.asarray(full_logits[:, -1]),
+                                   rtol=2e-2, atol=2e-2)
+    elif cfg.family == "moe":
+        # MoE capacity dropping differs between a gs=S-1 prefill and a
+        # gs=1 decode (tokens past expert capacity are dropped in the
+        # longer group); logits agree up to those drops.
+        a = np.asarray(step_logits[:, 0]).ravel()
+        b = np.asarray(full_logits[:, -1]).ravel()
+        corr = np.corrcoef(a, b)[0, 1]
+        assert corr > 0.99, corr
+    else:
+        assert np.all(np.isfinite(np.asarray(step_logits, np.float32)))
+
+
+def test_encdec_prefill_matches_forward():
+    """Whisper backbone: decoder prefill logits at the last position ==
+    forward_train logits at the last position (same enc context)."""
+    cfg = get_config("whisper-medium").reduced()
+    key = jax.random.PRNGKey(5)
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    full_logits, _ = forward_train(params, cfg, batch)
+    lg, cache = prefill(params, cfg, batch)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,53 @@
+"""shard_map expert-parallel MoE == GSPMD MoE (logits + grads), via an
+8-device subprocess."""
+
+import json
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import json, dataclasses
+import numpy as np, jax
+from repro.configs import get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.models import init_params, forward_train
+from repro.train.step import loss_fn
+
+cfg = get_config("olmoe-1b-7b").reduced()
+cfg = dataclasses.replace(cfg, dtype="float32", num_experts=8,
+                          experts_per_token=2)
+key = jax.random.PRNGKey(0)
+params = init_params(key, cfg)
+batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
+         "labels": jax.random.randint(jax.random.fold_in(key, 1), (4, 32),
+                                      0, cfg.vocab_size)}
+cfg_ep = dataclasses.replace(cfg, moe_shardmap_ep=True)
+mesh = make_debug_mesh()
+
+lp, _ = forward_train(params, cfg, batch)
+with mesh:
+    le, _ = jax.jit(lambda p, b: forward_train(p, cfg_ep, b))(params, batch)
+logit_err = float(np.max(np.abs(np.asarray(lp) - np.asarray(le))))
+
+g1 = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+with mesh:
+    g2 = jax.jit(jax.grad(lambda p: loss_fn(p, cfg_ep, batch)[0]))(params)
+grad_err = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                   - np.asarray(b, np.float32))))
+               for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+print("JSON" + json.dumps({"logit_err": logit_err, "grad_err": grad_err}))
+"""
+
+
+def test_moe_ep_matches_gspmd():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("JSON")][-1]
+    res = json.loads(line[4:])
+    assert res["logit_err"] < 1e-3, res
+    assert res["grad_err"] < 5e-3, res

@@ -1,0 +1,98 @@
+"""Property tests (hypothesis) on the Schedule IR invariants."""
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lowerbound import compute_lb_energy, t_lower_bound
+from repro.core.model import WSE2
+from repro.core import patterns as pat
+from repro.core.schedule import (ReduceTree, binary_tree, chain_tree,
+                                 star_tree, two_phase_tree)
+
+
+def random_pre_order_tree(p: int, rng) -> ReduceTree:
+    """Random contiguous-interval ordered tree (the Auto-Gen search
+    space)."""
+    parent = [-1] * p
+    children = [[] for _ in range(p)]
+
+    def build(lo: int, hi: int):
+        # vertex `lo` is the root of [lo, hi)
+        rest_lo = lo + 1
+        while rest_lo < hi:
+            split = rng.randint(rest_lo, hi - 1)  # child owns [split, hi)?
+            # choose child interval [rest_lo.. ] -- children get contiguous
+            # blocks in order
+            end = rng.randint(rest_lo + 1, hi)
+            parent[rest_lo] = lo
+            children[lo].append(rest_lo)
+            build(rest_lo, end)
+            rest_lo = end
+        return
+
+    build(0, p)
+    return ReduceTree(parent, children, root=0, label="random")
+
+
+@given(st.integers(2, 40), st.randoms(use_true_random=False))
+@settings(max_examples=40, deadline=None)
+def test_random_trees_validate_and_round(p, rng):
+    tree = random_pre_order_tree(p, rng)
+    tree.validate()
+    rounds = tree.to_rounds()
+    # every non-root vertex sends exactly once
+    total_sends = sum(len(r) for r in rounds)
+    assert total_sends == p - 1
+    for sends in rounds:
+        srcs = [s for s, _ in sends]
+        dsts = [d for _, d in sends]
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+
+
+@given(st.integers(2, 40), st.integers(1, 4096),
+       st.randoms(use_true_random=False))
+@settings(max_examples=40, deadline=None)
+def test_random_trees_cost_terms_sane(p, b, rng):
+    tree = random_pre_order_tree(p, rng)
+    terms = tree.cost_terms(b)
+    assert 1 <= terms.depth <= p - 1
+    assert terms.distance >= p - 1 or p == 1  # rightmost PE is p-1 hops out
+    assert terms.energy >= b * (p - 1)        # every link used at least once
+    assert terms.contention >= b
+    assert terms.cycles(WSE2) > 0
+
+
+@given(st.integers(2, 64), st.integers(1, 1 << 14))
+@settings(max_examples=60, deadline=None)
+def test_lower_bound_below_all_patterns(p, b):
+    # LB assumes towards-root messages (links = P-1); compare patterns
+    # under the same convention (Lemma 5.4's P-link variant differs by
+    # O(1/P) and is handled by the Fig. 1 benchmark at P=512).
+    lb_table = compute_lb_energy(64)
+    lb = t_lower_bound(p, b, lb_table=lb_table)
+    assert lb <= pat.t_chain(p, b) + 1e-6
+    assert lb <= two_phase_tree(p).cost_terms(b).cycles() + 1e-6
+    assert lb <= pat.t_star(p, b, refined=False) + 1e-6
+    if p & (p - 1) == 0:
+        assert lb <= pat.t_tree(p, b) + 1e-6
+
+
+@given(st.integers(2, 40), st.integers(1, 4096),
+       st.randoms(use_true_random=False))
+@settings(max_examples=40, deadline=None)
+def test_lower_bound_below_random_tree_cost(p, b, rng):
+    """The LB is a bound over the whole algorithm class the trees span."""
+    lb_table = compute_lb_energy(40)
+    lb = t_lower_bound(p, b, lb_table=lb_table)
+    tree = random_pre_order_tree(p, rng)
+    assert lb <= tree.cost_terms(b).cycles(WSE2) + 1e-6
+
+
+def test_fixed_pattern_trees_validate():
+    for p in (2, 3, 4, 8, 15, 16, 31, 64):
+        chain_tree(p).validate()
+        star_tree(p).validate()
+        two_phase_tree(p).validate()
+        if p & (p - 1) == 0:
+            binary_tree(p).validate()

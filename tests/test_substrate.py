@@ -1,0 +1,247 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault
+tolerance, configs."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, all_configs, cell_is_runnable, get_config
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_state, lr_at)
+from repro.runtime import (HeartbeatMonitor, PreemptionGuard,
+                           StragglerDetector, plan_elastic_remesh)
+
+
+# ------------------------------ optimizer ----------------------------- #
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, schedule="constant",
+                      warmup_steps=0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_state(params)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_wsd_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, schedule="wsd", warmup_steps=10,
+                      total_steps=100, decay_fraction=0.2, min_lr_ratio=0.1)
+    warm = float(lr_at(cfg, jnp.asarray(5)))
+    stable = float(lr_at(cfg, jnp.asarray(50)))
+    late = float(lr_at(cfg, jnp.asarray(100)))
+    assert warm < stable
+    assert stable == pytest.approx(1.0)
+    assert late == pytest.approx(0.1, rel=0.05)
+
+
+def test_grad_clip_applied():
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = init_state(params)
+    _, _, m = apply_updates(cfg, params, {"w": jnp.full(4, 100.0)}, state)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+# ------------------------------ data ---------------------------------- #
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
+    ds0 = SyntheticLMDataset(cfg, num_shards=2, shard_index=0)
+    ds1 = SyntheticLMDataset(cfg, num_shards=2, shard_index=1)
+    b0a, b0b = ds0.batch(7), ds0.batch(7)
+    np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])
+    b1 = ds1.batch(7)
+    assert not np.array_equal(b0a["tokens"], b1["tokens"])
+    # labels are next tokens
+    full = SyntheticLMDataset(cfg).batch(0)
+    assert full["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(full["tokens"][:, 1:],
+                                  full["labels"][:, :-1])
+
+
+# ------------------------------ checkpoint ---------------------------- #
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.ones(4, np.int32)}}
+    for step in (1, 2, 3):
+        mgr.save(step, tree, metadata={"step": step})
+    assert mgr.committed_steps() == [2, 3]
+    template = jax.tree.map(lambda a: np.zeros_like(a), tree)
+    step, restored, meta = mgr.restore(template)
+    assert step == 3 and meta["step"] == 3
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+
+
+def test_checkpoint_torn_write_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"a": np.ones(3)}
+    mgr.save(1, tree)
+    # simulate a torn step: shard written, COMMIT missing
+    os.makedirs(tmp_path / "step_00000002", exist_ok=True)
+    np.savez(tmp_path / "step_00000002" / "shard_0.npz", a=np.zeros(3))
+    assert mgr.committed_steps() == [1]
+    step, restored, _ = mgr.restore({"a": np.zeros(3)})
+    assert step == 1
+
+
+# ------------------------------ fault tolerance ----------------------- #
+def test_heartbeat_detects_dead_hosts():
+    clock = [0.0]
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10,
+                           clock=lambda: clock[0])
+    clock[0] = 5.0
+    mon.beat("h0")
+    clock[0] = 12.0
+    assert mon.dead_hosts() == ["h1"]
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=4, threshold=1.5)
+    for t in range(4):
+        for h in ("h0", "h1", "h2", "h3"):
+            det.record(h, 1.0 if h != "h2" else 2.5)
+    s = det.stragglers()
+    assert len(s) == 1 and s[0][0] == "h2" and s[0][1] > 2.0
+
+
+def test_elastic_remesh_plan():
+    plan = plan_elastic_remesh(
+        mesh_shape=(2, 16, 16), axis_names=("pod", "data", "model"),
+        hosts_per_slice=4, failed_hosts={"h3"},
+        all_hosts=[f"h{i}" for i in range(128)], restore_step=1000)
+    assert plan.new_mesh[2] == 16          # model axis untouched
+    assert plan.new_mesh[1] <= 16
+    assert plan.restore_step == 1000
+    assert 0 < plan.shrink_factor <= 1.0
+
+
+def test_preemption_guard():
+    g = PreemptionGuard(install=False)
+    assert not g.should_stop
+    g.request_stop()
+    assert g.should_stop
+
+
+# ------------------------------ configs ------------------------------- #
+def test_exact_assigned_configs():
+    c = get_config("arctic-480b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (35, 7168, 56, 8, 4864, 32000)
+    assert (c.num_experts, c.experts_per_token) == (128, 2)
+    assert c.moe_dense_ff > 0  # dense residual
+
+    c = get_config("olmoe-1b-7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.num_experts, c.experts_per_token) == (
+        16, 2048, 16, 16, 1024, 50304, 64, 8)
+
+    c = get_config("falcon-mamba-7b")
+    assert (c.num_layers, c.d_model, c.vocab_size, c.ssm_state) == (
+        64, 4096, 65024, 16)
+    assert c.family == "ssm"
+
+    c = get_config("whisper-medium")
+    assert (c.num_layers, c.encoder_layers, c.d_model, c.num_heads,
+            c.d_ff, c.vocab_size) == (24, 24, 1024, 16, 4096, 51865)
+
+    c = get_config("phi3-mini-3.8b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 3072, 32, 32, 8192, 32064)
+
+    c = get_config("mistral-nemo-12b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 5120, 32, 8, 14336, 131072)
+
+    c = get_config("yi-34b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (60, 7168, 56, 8, 20480, 64000)
+
+    c = get_config("minicpm-2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 2304, 36, 36, 5760, 122753)
+
+    c = get_config("llava-next-34b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (60, 7168, 56, 8, 20480, 64000)
+    assert c.frontend == "vision"
+
+    c = get_config("recurrentgemma-9b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (38, 4096, 16, 1, 12288, 256000)
+    assert c.block_pattern == ("rglru", "rglru", "local")
+    assert c.local_window == 2048
+
+
+def test_long_context_skip_rules():
+    long = SHAPES["long_500k"]
+    for name, cfg in all_configs().items():
+        runnable, why = cell_is_runnable(cfg, long)
+        if cfg.family in ("ssm", "hybrid"):
+            assert runnable, name
+        else:
+            assert not runnable and "full-attention" in why, name
+
+
+def test_param_counts_match_names():
+    expect = {"arctic-480b": 480e9, "olmoe-1b-7b": 6.9e9,
+              "falcon-mamba-7b": 7.3e9, "yi-34b": 34.4e9,
+              "mistral-nemo-12b": 12.2e9, "phi3-mini-3.8b": 3.8e9,
+              "minicpm-2b": 2.7e9, "recurrentgemma-9b": 9.0e9}
+    for name, n in expect.items():
+        got = get_config(name).param_count()
+        assert 0.65 * n <= got <= 1.35 * n, (name, got, n)
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    """bfloat16 leaves must survive the npz round-trip (encoded as raw
+    uint16 + dtype sidecar)."""
+    import ml_dtypes
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": np.arange(8, dtype=np.float32).astype(ml_dtypes.bfloat16),
+            "b": np.ones(3, np.float32)}
+    mgr.save(1, tree)
+    template = {"w": np.zeros(8, ml_dtypes.bfloat16),
+                "b": np.zeros(3, np.float32)}
+    _, restored, _ = mgr.restore(template)
+    assert restored["w"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        restored["w"].astype(np.float32), tree["w"].astype(np.float32))
+
+
+def test_master_weights_mixed_precision():
+    """The classic bf16 stall: updates far below the parameter's ulp
+    vanish without an fp32 master (w ~ 1000 has ulp 4 in bf16; Adam
+    steps of ~0.01 round away).  The master accumulates them."""
+    target = jnp.array([1001.0, 999.0])
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.0, schedule="constant",
+                      warmup_steps=0, grad_clip=1e9)
+
+    def run(master):
+        params = {"w": jnp.full(2, 1000.0, jnp.bfloat16)}
+        state = init_state(params, master_weights=master)
+        best = np.inf
+        for _ in range(300):
+            g = {"w": 2 * (params["w"].astype(jnp.float32) - target)}
+            params, state, _ = apply_updates(cfg, params, g, state)
+            ref = state.master["w"] if master else params["w"].astype(
+                jnp.float32)
+            best = min(best, float(np.abs(np.asarray(ref)
+                                          - np.asarray(target)).max()))
+        return best
+
+    best_master = run(True)
+    best_plain = run(False)
+    # bf16-only never leaves 1000 (updates below the ulp round away);
+    # the fp32 master passes within Adam-step distance of the target
+    # (it oscillates around it because the *gradient* is still computed
+    # from the quantized bf16 param -- the stall is what we demonstrate)
+    assert best_plain >= 0.9, best_plain
+    assert best_master < 0.2, best_master

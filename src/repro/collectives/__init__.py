@@ -1,9 +1,19 @@
-from repro.collectives.api import (allreduce, allreduce_inside,
-                                   reduce_to_root, select_algorithm)
+from repro.collectives.api import (allgather, allgather_inside, allreduce,
+                                   allreduce_inside, broadcast,
+                                   broadcast_inside, get_engine,
+                                   reduce_scatter, reduce_scatter_inside,
+                                   reduce_to_root, select_algorithm,
+                                   set_engine)
+from repro.collectives.engine import (CollectiveEngine, Decision, fit_fabric,
+                                      measure_ppermute)
 from repro.collectives.overlap import (bucket_algorithm_plan,
                                        bucketed_allreduce)
 from repro.collectives import shardmap_impl
 
-__all__ = ["allreduce", "allreduce_inside", "reduce_to_root",
-           "select_algorithm", "bucket_algorithm_plan",
+__all__ = ["allreduce", "allreduce_inside", "reduce_scatter",
+           "reduce_scatter_inside", "allgather", "allgather_inside",
+           "broadcast", "broadcast_inside", "reduce_to_root",
+           "select_algorithm", "get_engine", "set_engine",
+           "CollectiveEngine", "Decision", "fit_fabric",
+           "measure_ppermute", "bucket_algorithm_plan",
            "bucketed_allreduce", "shardmap_impl"]

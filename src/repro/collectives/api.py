@@ -1,122 +1,129 @@
 """Public collective API: model-driven algorithm selection on TPU meshes.
 
     allreduce(x, mesh, axis, algorithm="auto")
+    reduce_scatter(x, mesh, axis, algorithm="auto")
+    allgather(x, mesh, axis, algorithm="auto")
+    broadcast(x, mesh, axis, root=0, algorithm="auto")
 
 ``algorithm``:
   psum        -- XLA-native (baseline; what GSPMD would emit)
   chain / tree / two_phase / star -- the paper's fixed patterns (Sec. 5)
                  composed with a doubling broadcast (Sec. 6.1)
   ring        -- reduce-scatter + all-gather (Sec. 6.2)
-  autogen     -- the Auto-Gen DP run with ICI constants at trace time;
-                 the resulting pre-order tree executes as rounds of
-                 disjoint ppermutes (Sec. 5.5, retargeted)
+  autogen     -- the Auto-Gen DP tree executed as rounds of disjoint
+                 ppermutes (Sec. 5.5, retargeted to ICI)
   auto        -- the model (Eq. 1, TPU-parameterized) picks among the
                  above given (bytes, axis size): the paper's selector.
 
-This is the paper's contribution as a first-class framework feature: the
-gradient-synchronization strategy of the trainer is `auto` by default in
-pure-DP mode (see overlap.py).
+All dispatch, caching, and calibration lives in the CollectiveEngine
+(engine.py); this module keeps the stable functional surface and hands
+out a process-wide default engine per Fabric so every call site -- the
+gradient-sync path, the serve path, benchmarks -- shares one decision
+cache.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import threading
+from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
-from repro.core.autogen import autogen_tree, compute_tables, t_autogen
 from repro.core.model import TPU_V5E_AXIS, Fabric
-from repro.core import patterns as pat
-from repro.collectives import shardmap_impl as impl
+from repro.collectives.engine import CollectiveEngine
 
-_ICI_ELEMENT_BYTES = 512  # one model "element" on the TPU fabric (flit)
+_ENGINES: Dict[Fabric, CollectiveEngine] = {}
+_ENGINES_LOCK = threading.Lock()
 
 
-def _elements(x: jax.Array) -> int:
-    return max(1, (x.size * x.dtype.itemsize) // _ICI_ELEMENT_BYTES)
+def get_engine(fabric: Fabric = TPU_V5E_AXIS) -> CollectiveEngine:
+    """Process-wide engine for a fabric (shared decision cache)."""
+    with _ENGINES_LOCK:
+        eng = _ENGINES.get(fabric)
+        if eng is None:
+            eng = CollectiveEngine(fabric=fabric)
+            _ENGINES[fabric] = eng
+        return eng
+
+
+def set_engine(engine: CollectiveEngine,
+               fabric: Optional[Fabric] = None) -> None:
+    """Install ``engine`` as the default for its (or ``fabric``'s) key."""
+    with _ENGINES_LOCK:
+        _ENGINES[fabric or engine.fabric] = engine
 
 
 def select_algorithm(nbytes: int, p: int,
                      fabric: Fabric = TPU_V5E_AXIS) -> str:
-    """The paper's model-driven selection with ICI constants.
+    """The paper's model-driven AllReduce selection with ICI constants.
 
-    Evaluates every implemented AllReduce under Eq. (1); on ICI the
-    missing multicast penalizes reduce-then-broadcast at large B, so ring
-    wins the bandwidth-bound region while tree/two-phase win the
-    latency-bound region (DESIGN.md: hardware adaptation)."""
-    b = max(1, nbytes // _ICI_ELEMENT_BYTES)
-    cands = {
-        "tree": (pat.t_tree(p, b, fabric) + pat.t_broadcast(p, b, fabric)
-                 if p & (p - 1) == 0 else float("inf")),
-        "two_phase": pat.t_two_phase(p, b, fabric)
-        + pat.t_broadcast(p, b, fabric),
-        "chain": pat.t_chain(p, b, fabric) + pat.t_broadcast(p, b, fabric),
-        "ring": pat.t_ring_allreduce(p, b, fabric),
-    }
-    return min(cands, key=cands.get)
-
-
-def _reduce_impl(x, axis: str, algorithm: str, fabric: Fabric):
-    p = jax.lax.axis_size(axis)
-    if algorithm == "chain":
-        return impl.chain_reduce(x, axis)
-    if algorithm == "tree":
-        return impl.tree_reduce(x, axis)
-    if algorithm == "two_phase":
-        return impl.two_phase_reduce(x, axis)
-    if algorithm == "star":
-        return impl.star_reduce(x, axis)
-    if algorithm == "autogen":
-        tree = autogen_tree(p, _elements(x), fabric=fabric)
-        return impl.schedule_reduce(x, axis, tree.to_rounds())
-    if algorithm == "autogen_pipelined":
-        tree = autogen_tree(p, _elements(x), fabric=fabric)
-        flat = x.reshape(-1)
-        out = impl.schedule_reduce_pipelined(flat, axis, tree.to_rounds())
-        return out.reshape(x.shape)
-    raise ValueError(f"unknown reduce algorithm {algorithm!r}")
+    On ICI the missing multicast penalizes reduce-then-broadcast at
+    large B, so ring wins the bandwidth-bound region while
+    tree/two-phase win the latency-bound region (DESIGN.md: hardware
+    adaptation).  Cached per (P, bytes) by the engine."""
+    return get_engine(fabric).select("allreduce", nbytes, p).algorithm
 
 
 def allreduce_inside(x: jax.Array, axis: str, algorithm: str = "auto",
                      fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
     """AllReduce usable *inside* an existing shard_map."""
-    if algorithm == "psum":
-        return jax.lax.psum(x, axis)
-    p = jax.lax.axis_size(axis)
-    if algorithm == "auto":
-        algorithm = select_algorithm(x.size * x.dtype.itemsize, p, fabric)
-    if algorithm == "ring":
-        flat = x.reshape(-1)
-        return impl.ring_allreduce(flat, axis).reshape(x.shape)
-    red = _reduce_impl(x, axis, algorithm, fabric)
-    return impl.broadcast(red, axis, root=0)
+    return get_engine(fabric).allreduce_inside(x, axis, algorithm)
+
+
+def reduce_scatter_inside(x: jax.Array, axis: str, algorithm: str = "auto",
+                          fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    return get_engine(fabric).reduce_scatter_inside(x, axis, algorithm)
+
+
+def allgather_inside(x: jax.Array, axis: str, algorithm: str = "auto",
+                     fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    return get_engine(fabric).allgather_inside(x, axis, algorithm)
+
+
+def broadcast_inside(x: jax.Array, axis: str, root: int = 0,
+                     algorithm: str = "auto",
+                     fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    return get_engine(fabric).broadcast_inside(x, axis, root, algorithm)
 
 
 def allreduce(x: jax.Array, mesh: Mesh, axis: str,
               algorithm: str = "auto",
               fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
     """AllReduce a replicated-along-`axis` array over one mesh axis."""
-    other_axes = tuple(a for a in mesh.axis_names if a != axis)
-    spec = P()  # x replicated over the target axis (pure-DP gradient case)
-    fn = functools.partial(allreduce_inside, axis=axis,
-                           algorithm=algorithm, fabric=fabric)
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
-                     check_rep=False)(x)
+    return get_engine(fabric).allreduce(x, mesh, axis, algorithm)
 
 
 def reduce_to_root(x: jax.Array, mesh: Mesh, axis: str,
                    algorithm: str = "chain",
                    fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
     """Paper Reduce: result valid on device 0 of the axis."""
-    fn = functools.partial(_reduce_impl, axis=axis, algorithm=algorithm,
-                           fabric=fabric)
-    return shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P(),
-                     check_rep=False)(x)
+    return get_engine(fabric).reduce_to_root(x, mesh, axis, algorithm)
 
 
-__all__ = ["allreduce", "allreduce_inside", "reduce_to_root",
-           "select_algorithm"]
+def reduce_scatter(x: jax.Array, mesh: Mesh, axis: str,
+                   algorithm: str = "auto",
+                   fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Sum over the axis, result sharded along it (device i: chunk i)."""
+    return get_engine(fabric).reduce_scatter(x, mesh, axis, algorithm)
+
+
+def allgather(x: jax.Array, mesh: Mesh, axis: str,
+              algorithm: str = "auto",
+              fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Gather axis-sharded leading-dim chunks into a replicated array."""
+    return get_engine(fabric).allgather(x, mesh, axis, algorithm)
+
+
+def broadcast(x: jax.Array, mesh: Mesh, axis: str, root: int = 0,
+              algorithm: str = "auto",
+              fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Replicate device `root`'s value across the axis."""
+    return get_engine(fabric).broadcast(x, mesh, axis, root, algorithm)
+
+
+__all__ = ["get_engine", "set_engine", "select_algorithm",
+           "allreduce", "allreduce_inside",
+           "reduce_scatter", "reduce_scatter_inside",
+           "allgather", "allgather_inside",
+           "broadcast", "broadcast_inside", "reduce_to_root"]

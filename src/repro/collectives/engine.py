@@ -1,0 +1,512 @@
+"""CollectiveEngine: one dispatch layer for all collective traffic.
+
+The paper's contribution is *model-driven selection*: evaluate every
+implemented algorithm under the spatial performance model (Eq. 1) and
+run the winner.  The engine makes that a subsystem instead of a per-call
+computation:
+
+* **Ops** -- ``allreduce``, ``reduce``, ``reduce_scatter``,
+  ``allgather``, ``broadcast``, each with fixed-pattern backends and an
+  Auto-Gen (DP tree) backend, selected by ``algorithm="auto"``.
+* **Decision cache** -- selections are memoized by
+  ``(op, P, bytes, fabric)`` and persisted as JSON under the same
+  ``REPRO_CACHE_DIR`` the Auto-Gen npz tables use, so the DP and the
+  model sweep run once per shape across traces *and* processes.
+* **Tree cache** -- extracted Auto-Gen round schedules are memoized by
+  ``(P, elements)`` so an explicit ``algorithm="autogen"`` trace never
+  re-runs the DP either.
+* **Calibration** -- ``calibrate()`` refits the Fabric constants from
+  measured ppermute timings (``measure_ppermute``), so selection tracks
+  the actual backend instead of the baked-in ICI constants.
+
+Dispatch flow::
+
+    user op (allreduce/reduce_scatter/...)          [api.py wrappers]
+        -> engine.<op>_inside(x, axis, algorithm)   [inside shard_map]
+            -> select(op, nbytes, P)                [decision cache]
+                -> selector.predict_collective      [model, Eq. 1]
+                -> autogen DP (tree cache, npz)     [only if needed]
+            -> shardmap_impl backend                [rounds of ppermutes]
+"""
+
+from __future__ import annotations
+
+import atexit
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.autogen import autogen_tree, cache_dir, compute_tables
+from repro.core.model import Fabric, TPU_V5E_AXIS
+from repro.core import selector
+from repro.collectives import shardmap_impl as impl
+
+#: one model "element" on the TPU fabric (512-byte flit group)
+ICI_ELEMENT_BYTES = 512
+
+#: bump when the cost model changes (patterns/selector) so persisted
+#: decisions computed under the old model stop being served
+MODEL_VERSION = 1
+
+Rounds = Tuple[Tuple[Tuple[int, int], ...], ...]
+
+
+def _freeze_rounds(rounds: Sequence[Sequence[Tuple[int, int]]]) -> Rounds:
+    return tuple(tuple((int(s), int(d)) for s, d in r) for r in rounds)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One cached selection: what to run for (op, P, bytes)."""
+
+    op: str
+    p: int
+    nbytes: int
+    algorithm: str
+    predicted: float
+    predictions: Dict[str, float]
+    rounds: Optional[Rounds] = None   # Auto-Gen schedule, when selected
+
+
+def fit_fabric(measurements: Sequence[Tuple[int, float]],
+               base: Fabric = TPU_V5E_AXIS, name: Optional[str] = None,
+               element_bytes: int = ICI_ELEMENT_BYTES) -> Fabric:
+    """Fit Fabric constants from measured one-hop ppermute timings.
+
+    ``measurements`` is a sequence of ``(nbytes, seconds)`` for a single
+    neighbor ppermute.  Under the model a hop costs
+    ``(2*t_r + B) * cycle`` seconds with B in elements, so a least-squares
+    line ``seconds = alpha + beta * B`` recovers ``cycle = beta`` and
+    ``t_r = alpha / (2 * beta)``.  Only the *ratios* enter selection, so
+    the returned Fabric keeps the model's unit convention (1 cycle = one
+    element over one link).
+    """
+    if len(measurements) < 2:
+        raise ValueError("need >= 2 (nbytes, seconds) points to calibrate")
+    els = np.array([max(1, nb // element_bytes) for nb, _ in measurements],
+                   dtype=np.float64)
+    secs = np.array([t for _, t in measurements], dtype=np.float64)
+    beta, alpha = np.polyfit(els, secs, 1)
+    beta = max(float(beta), 1e-30)
+    t_r = max(float(alpha) / (2.0 * beta), 0.0)
+    return Fabric(name=name or f"{base.name}_calibrated",
+                  t_r=t_r, store_cost=base.store_cost,
+                  link_bw=base.link_bw, multicast=base.multicast)
+
+
+def measure_ppermute(mesh: Mesh, axis: str,
+                     sizes_bytes: Sequence[int] = (1 << 12, 1 << 16,
+                                                   1 << 20, 1 << 22),
+                     repeats: int = 5) -> List[Tuple[int, float]]:
+    """Time one neighbor-shift ppermute per size; feed to ``fit_fabric``."""
+    p = mesh.shape[axis]
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    out = []
+    for nbytes in sizes_bytes:
+        n = max(1, nbytes // 4)
+        x = jnp.zeros((n,), jnp.float32)
+
+        fn = shard_map(lambda v: lax.ppermute(v, axis, perm), mesh=mesh,
+                       in_specs=P(), out_specs=P(), check_rep=False)
+        jitted = jax.jit(fn)
+        jitted(x).block_until_ready()          # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jitted(x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        out.append((nbytes, best))
+    return out
+
+
+class CollectiveEngine:
+    """Cached, model-driven dispatch for every collective op.
+
+    One engine per Fabric parameterization; ``api.get_engine()`` hands
+    out a process-wide default keyed by fabric so all call sites share
+    one decision cache.
+    """
+
+    def __init__(self, fabric: Fabric = TPU_V5E_AXIS,
+                 cache_path: Optional[str] = None, persist: bool = True,
+                 element_bytes: int = ICI_ELEMENT_BYTES):
+        self.fabric = fabric
+        self.element_bytes = element_bytes
+        self._persist = persist
+        self._cache_path_override = cache_path
+        self._decisions: Dict[str, Decision] = {}
+        self._tree_rounds: Dict[Tuple[int, int], Rounds] = {}
+        self._tables: Dict[int, Any] = {}
+        self._loaded = False
+        self._lock = threading.RLock()
+        self._dirty = False
+        self._last_save = 0.0
+        self.stats = {"hits": 0, "misses": 0, "dp_runs": 0,
+                      "persisted_loads": 0}
+        if persist:
+            atexit.register(self.flush)
+
+    # ------------------------------------------------------------------ #
+    # decision cache
+    # ------------------------------------------------------------------ #
+    def _fabric_tag(self) -> str:
+        f = self.fabric
+        return (f"{f.name}_tr{f.t_r:g}_st{f.store_cost:g}_bw{f.link_bw:g}"
+                f"_mc{int(f.multicast)}_eb{self.element_bytes}"
+                f"_v{MODEL_VERSION}")
+
+    def _cache_path(self) -> str:
+        if self._cache_path_override:
+            return self._cache_path_override
+        return os.path.join(cache_dir(),
+                            f"engine_decisions__{self._fabric_tag()}.json")
+
+    def _elements(self, nbytes: int) -> int:
+        return max(1, nbytes // self.element_bytes)
+
+    def _load_persisted(self) -> None:
+        if self._loaded or not self._persist:
+            self._loaded = True
+            return
+        self._loaded = True
+        path = self._cache_path()
+        if not os.path.exists(path):
+            return
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            return
+        # decisions are only valid for the constants they were computed
+        # under (matters when cache_path pins the file name but
+        # calibrate() swaps the fabric)
+        if payload.get("fabric") != self._fabric_tag():
+            return
+        for key, d in payload.get("decisions", {}).items():
+            rounds = (_freeze_rounds(d["rounds"])
+                      if d.get("rounds") else None)
+            self._decisions[key] = Decision(
+                op=d["op"], p=int(d["p"]), nbytes=int(d["nbytes"]),
+                algorithm=d["algorithm"], predicted=float(d["predicted"]),
+                predictions={k: float(v)
+                             for k, v in d["predictions"].items()},
+                rounds=rounds)
+            self.stats["persisted_loads"] += 1
+
+    def _maybe_save(self) -> None:
+        """Write-behind: cold-start sweeps decide many shapes back to
+        back, so full-file rewrites are throttled to ~1/s; ``flush()``
+        (also registered atexit) writes the tail."""
+        if self._dirty and time.monotonic() - self._last_save >= 1.0:
+            self._save_persisted()
+
+    def flush(self) -> None:
+        """Force any unsaved decisions to disk now."""
+        with self._lock:
+            if self._dirty:
+                self._save_persisted()
+
+    def _save_persisted(self) -> None:
+        if not self._persist:
+            self._dirty = False
+            return
+        raw = {}
+        for key, d in self._decisions.items():
+            raw[key] = {"op": d.op, "p": d.p, "nbytes": d.nbytes,
+                        "algorithm": d.algorithm, "predicted": d.predicted,
+                        "predictions": d.predictions,
+                        "rounds": [[list(s) for s in r] for r in d.rounds]
+                        if d.rounds else None}
+        try:
+            path = self._cache_path()
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + f".tmp{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump({"fabric": self._fabric_tag(), "decisions": raw},
+                          f)
+            os.replace(tmp, path)
+        except OSError:
+            # unwritable/bogus cache dir: selection still works, it just
+            # stays in-memory for this process
+            self._persist = False
+        self._dirty = False
+        self._last_save = time.monotonic()
+
+    def _tables_for(self, p: int):
+        tables = self._tables.get(p)
+        if tables is None:
+            tables = compute_tables(p)
+            self._tables[p] = tables
+        return tables
+
+    def tree_rounds(self, p: int, b_elements: int) -> Rounds:
+        """Auto-Gen round schedule for (P, B), DP'd at most once."""
+        with self._lock:
+            key = (p, b_elements)
+            rounds = self._tree_rounds.get(key)
+            if rounds is None:
+                self.stats["dp_runs"] += 1
+                tree = autogen_tree(p, b_elements, fabric=self.fabric,
+                                    tables=self._tables_for(p))
+                rounds = _freeze_rounds(tree.to_rounds())
+                self._tree_rounds[key] = rounds
+            return rounds
+
+    def select(self, op: str, nbytes: int, p: int) -> Decision:
+        """Model-driven selection, memoized by (op, P, bytes, fabric).
+
+        ``allreduce`` keeps the paper-selector candidate set (fixed
+        patterns + ring); the other ops additionally model their
+        Auto-Gen backend, so a cache miss may run the DP (counted in
+        ``stats['dp_runs']`` via the tree/table caches).
+        """
+        if p <= 1:
+            return Decision(op, p, nbytes, "identity", 0.0, {})
+        with self._lock:
+            self._load_persisted()
+            key = f"{op}|p={p}|B={nbytes}"
+            hit = self._decisions.get(key)
+            if hit is not None:
+                self.stats["hits"] += 1
+                return hit
+            self.stats["misses"] += 1
+            b = self._elements(nbytes)
+            include_autogen = op != "allreduce"
+            if include_autogen:
+                tables = self._tables_for(p)
+            else:
+                tables = None
+            preds = selector.predict_collective(
+                op, p, b, self.fabric, include_autogen=include_autogen,
+                tables=tables)
+            if op == "allreduce":
+                # the paper's TPU selector: star loses to its own
+                # broadcast on ICI, so it is not a candidate
+                preds.pop("star", None)
+            name = min(preds, key=preds.get)
+            rounds = (self.tree_rounds(p, self._tree_elements(op, b, p))
+                      if name == "autogen" else None)
+            decision = Decision(op, p, nbytes, name, preds[name],
+                                {k: float(v) for k, v in preds.items()},
+                                rounds)
+            self._decisions[key] = decision
+            self._dirty = True
+            self._maybe_save()
+            return decision
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._decisions.clear()
+            self._tree_rounds.clear()
+            self._tables.clear()
+            self._loaded = False
+
+    def decision_table(self) -> List[Decision]:
+        """Everything decided so far (introspection/reporting)."""
+        with self._lock:
+            self._load_persisted()
+            return sorted(self._decisions.values(),
+                          key=lambda d: (d.op, d.p, d.nbytes))
+
+    # ------------------------------------------------------------------ #
+    # calibration
+    # ------------------------------------------------------------------ #
+    def calibrate(self,
+                  measurements: Optional[Sequence[Tuple[int, float]]] = None,
+                  mesh: Optional[Mesh] = None, axis: str = "data",
+                  sizes_bytes: Sequence[int] = (1 << 12, 1 << 16, 1 << 20,
+                                                1 << 22)) -> Fabric:
+        """Refit the fabric from timings and drop stale decisions.
+
+        Pass explicit ``measurements`` (e.g. from a fleet microbenchmark
+        artifact) or a ``mesh`` to run ``measure_ppermute`` in place.
+        """
+        if measurements is None:
+            if mesh is None:
+                raise ValueError("calibrate() needs measurements or a mesh")
+            measurements = measure_ppermute(mesh, axis, sizes_bytes)
+        with self._lock:
+            self.fabric = fit_fabric(measurements, base=self.fabric,
+                                     element_bytes=self.element_bytes)
+            # fabric changed => cache namespace (file name) changed too;
+            # in-memory decisions predate the new constants
+            self._decisions.clear()
+            self._tree_rounds.clear()
+            self._loaded = False
+        return self.fabric
+
+    # ------------------------------------------------------------------ #
+    # dispatch: *_inside run under an existing shard_map axis binding
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _tree_elements(op: str, b: int, p: int) -> int:
+        """Vector length the Auto-Gen DP should optimize for: the
+        chunked ops run the tree per B/P-element chunk (that is also
+        the size their `autogen` prediction was priced at)."""
+        if op in ("reduce_scatter", "allgather"):
+            return max(1, -(-b // p))
+        return b
+
+    def _resolve(self, op: str, nbytes: int, p: int, algorithm: str
+                 ) -> Tuple[str, Optional[Rounds]]:
+        """``nbytes`` is always the GLOBAL vector size the cost model is
+        written in terms of (callers of allgather pass shard * P)."""
+        if algorithm == "auto":
+            d = self.select(op, nbytes, p)
+            return d.algorithm, d.rounds
+        if algorithm in ("autogen", "autogen_pipelined"):
+            b = self._tree_elements(op, self._elements(nbytes), p)
+            return algorithm, self.tree_rounds(p, b)
+        return algorithm, None
+
+    def reduce_inside(self, x: jax.Array, axis: str,
+                      algorithm: str = "auto") -> jax.Array:
+        """Paper Reduce: full sum lands on device 0 of the axis."""
+        p = impl._axis_size(axis)
+        if p == 1:
+            return x
+        algorithm, rounds = self._resolve("reduce", x.size * x.dtype.itemsize,
+                                          p, algorithm)
+        if algorithm == "chain":
+            return impl.chain_reduce(x, axis)
+        if algorithm == "tree":
+            return impl.tree_reduce(x, axis)
+        if algorithm == "two_phase":
+            return impl.two_phase_reduce(x, axis)
+        if algorithm == "star":
+            return impl.star_reduce(x, axis)
+        if algorithm == "autogen":
+            return impl.schedule_reduce(x, axis, rounds)
+        if algorithm == "autogen_pipelined":
+            flat = x.reshape(-1)
+            out = impl.schedule_reduce_pipelined(flat, axis, rounds)
+            return out.reshape(x.shape)
+        raise ValueError(f"unknown reduce algorithm {algorithm!r}")
+
+    def allreduce_inside(self, x: jax.Array, axis: str,
+                         algorithm: str = "auto") -> jax.Array:
+        if algorithm == "psum":
+            return lax.psum(x, axis)
+        p = impl._axis_size(axis)
+        if p == 1:
+            return x
+        algorithm, rounds = self._resolve(
+            "allreduce", x.size * x.dtype.itemsize, p, algorithm)
+        if algorithm == "ring":
+            flat = x.reshape(-1)
+            return impl.ring_allreduce(flat, axis).reshape(x.shape)
+        red = self.reduce_inside(x, axis, algorithm)
+        return impl.broadcast(red, axis, root=0)
+
+    def reduce_scatter_inside(self, x: jax.Array, axis: str,
+                              algorithm: str = "auto") -> jax.Array:
+        """Sum over the axis, shard the result: device i gets chunk i
+        (``lax.psum_scatter(..., tiled=True)`` semantics; leading dim
+        divisible by P)."""
+        p = impl._axis_size(axis)
+        if p == 1:
+            return x
+        if algorithm != "psum_scatter":
+            algorithm, rounds = self._resolve(
+                "reduce_scatter", x.size * x.dtype.itemsize, p, algorithm)
+        if algorithm == "psum_scatter":
+            return lax.psum_scatter(x, axis, scatter_dimension=0,
+                                    tiled=True)
+        if algorithm == "ring":
+            return impl.reduce_scatter_ring(x, axis)
+        if algorithm == "autogen":
+            return impl.schedule_reduce_scatter(x, axis, rounds)
+        raise ValueError(f"unknown reduce_scatter algorithm {algorithm!r}")
+
+    def allgather_inside(self, x: jax.Array, axis: str,
+                         algorithm: str = "auto") -> jax.Array:
+        """Gather shards along the axis into the leading dim
+        (``lax.all_gather(..., tiled=True)`` semantics)."""
+        p = impl._axis_size(axis)
+        if p == 1:
+            return x
+        if algorithm != "all_gather":
+            # x is the local shard; the cost model prices the global
+            # gather, so scale by P
+            algorithm, rounds = self._resolve(
+                "allgather", x.size * x.dtype.itemsize * p, p, algorithm)
+        if algorithm == "all_gather":
+            return lax.all_gather(x, axis, tiled=True)
+        if algorithm == "ring":
+            return impl.allgather_ring(x, axis)
+        if algorithm == "doubling":
+            return impl.allgather_doubling(x, axis)
+        if algorithm == "autogen":
+            return impl.schedule_allgather(x, axis, rounds)
+        raise ValueError(f"unknown allgather algorithm {algorithm!r}")
+
+    def broadcast_inside(self, x: jax.Array, axis: str, root: int = 0,
+                         algorithm: str = "auto") -> jax.Array:
+        p = impl._axis_size(axis)
+        if p == 1:
+            return x
+        algorithm, rounds = self._resolve(
+            "broadcast", x.size * x.dtype.itemsize, p, algorithm)
+        if algorithm == "doubling":
+            return impl.broadcast(x, axis, root=root)
+        if algorithm == "chain":
+            return impl.chain_broadcast(x, axis, root=root)
+        if algorithm == "autogen":
+            if root != 0:
+                rounds = impl._rotate_rounds(rounds, p, root)
+            seeded = jnp.where(impl._axis_index(axis) == root, x,
+                               jnp.zeros_like(x))
+            return impl.schedule_broadcast(seeded, axis, rounds)
+        raise ValueError(f"unknown broadcast algorithm {algorithm!r}")
+
+    # ------------------------------------------------------------------ #
+    # outer wrappers: build the shard_map for replicated operands
+    # ------------------------------------------------------------------ #
+    def _wrap(self, fn: Callable[[jax.Array], jax.Array], mesh: Mesh,
+              in_spec: P, out_spec: P) -> Callable[[jax.Array], jax.Array]:
+        return shard_map(fn, mesh=mesh, in_specs=in_spec,
+                         out_specs=out_spec, check_rep=False)
+
+    def allreduce(self, x: jax.Array, mesh: Mesh, axis: str,
+                  algorithm: str = "auto") -> jax.Array:
+        fn = lambda v: self.allreduce_inside(v, axis, algorithm)
+        return self._wrap(fn, mesh, P(), P())(x)
+
+    def reduce_to_root(self, x: jax.Array, mesh: Mesh, axis: str,
+                       algorithm: str = "auto") -> jax.Array:
+        fn = lambda v: self.reduce_inside(v, axis, algorithm)
+        return self._wrap(fn, mesh, P(), P())(x)
+
+    def reduce_scatter(self, x: jax.Array, mesh: Mesh, axis: str,
+                       algorithm: str = "auto") -> jax.Array:
+        """x replicated [N, ...] -> global [N, ...] summed over the axis,
+        laid out sharded along it (device i holds chunk i)."""
+        fn = lambda v: self.reduce_scatter_inside(v, axis, algorithm)
+        return self._wrap(fn, mesh, P(), P(axis))(x)
+
+    def allgather(self, x: jax.Array, mesh: Mesh, axis: str,
+                  algorithm: str = "auto") -> jax.Array:
+        """x sharded [N, ...] along the axis -> replicated [N, ...]."""
+        fn = lambda v: self.allgather_inside(v, axis, algorithm)
+        return self._wrap(fn, mesh, P(axis), P())(x)
+
+    def broadcast(self, x: jax.Array, mesh: Mesh, axis: str, root: int = 0,
+                  algorithm: str = "auto") -> jax.Array:
+        fn = lambda v: self.broadcast_inside(v, axis, root, algorithm)
+        return self._wrap(fn, mesh, P(), P())(x)
+
+
+__all__ = ["CollectiveEngine", "Decision", "fit_fabric",
+           "measure_ppermute", "ICI_ELEMENT_BYTES"]

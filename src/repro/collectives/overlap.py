@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.collectives.api import allreduce_inside, select_algorithm
+from repro.collectives.api import get_engine
+from repro.collectives.engine import CollectiveEngine
 from repro.core.model import TPU_V5E_AXIS
 
 DEFAULT_BUCKET_BYTES = 32 * 1024 * 1024
@@ -65,13 +66,20 @@ def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
                        bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                        compress: bool = False,
                        error_feedback: Optional[Any] = None,
-                       mean: bool = True):
+                       mean: bool = True,
+                       engine: Optional[CollectiveEngine] = None):
     """AllReduce a gradient pytree over DP axes.
 
     Multi-axis (('pod','data')) runs hierarchically: reduce over 'data'
     within each pod, then over 'pod' -- the Two-Phase pattern at pod
     granularity.  Returns (reduced_grads, new_error_feedback).
+
+    All collective traffic flows through the CollectiveEngine, so the
+    per-bucket `auto` selection is cached across steps (one model sweep
+    per bucket size, not one per trace).
     """
+    if engine is None:
+        engine = get_engine()
     if error_feedback is not None:
         grads = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
                              grads, error_feedback)
@@ -82,7 +90,7 @@ def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
         if compress:
             v = v.astype(jnp.bfloat16)
         for ax in reversed(axes):        # intra-pod first, then cross-pod
-            v = allreduce_inside(v, ax, algorithm=algorithm)
+            v = engine.allreduce_inside(v, ax, algorithm=algorithm)
         return v.astype(jnp.float32)
 
     spec = P()
@@ -111,9 +119,12 @@ def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
 
 
 def bucket_algorithm_plan(grads, mesh: Mesh, axis: str = "data",
-                          bucket_bytes: int = DEFAULT_BUCKET_BYTES
+                          bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                          engine: Optional[CollectiveEngine] = None
                           ) -> List[Tuple[int, str]]:
     """What the selector would pick per bucket (introspection/reporting)."""
+    if engine is None:
+        engine = get_engine()
     leaves = jax.tree.leaves(grads)
     total = sum(l.size * 4 for l in leaves)
     p = mesh.shape[axis]
@@ -121,7 +132,7 @@ def bucket_algorithm_plan(grads, mesh: Mesh, axis: str = "data",
     off = 0
     while off < total:
         b = min(bucket_bytes, total - off)
-        plan.append((b, select_algorithm(b, p)))
+        plan.append((b, engine.select("allreduce", b, p).algorithm))
         off += b
     return plan
 

@@ -21,7 +21,12 @@ from jax import lax
 
 
 def _axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    # jax >= 0.4.32 removed lax.axis_size; psum of a Python scalar is
+    # evaluated statically under shard_map and returns the axis size.
+    size = getattr(lax, "axis_size", None)
+    if size is not None:
+        return size(axis)
+    return lax.psum(1, axis)
 
 
 def _axis_index(axis: str):
@@ -133,6 +138,86 @@ def broadcast(x: jax.Array, axis: str, root: int = 0) -> jax.Array:
     return acc
 
 
+def chain_broadcast(x: jax.Array, axis: str, root: int = 0) -> jax.Array:
+    """Linear-pipeline broadcast: root passes down the line, P-1 hops.
+    Latency-heavy but minimal-energy; the model decides when it wins."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    acc = jnp.where(idx == root, x, jnp.zeros_like(x))
+    for t in range(p - 1):
+        src = (root + t) % p
+        dst = (root + t + 1) % p
+        shifted = lax.ppermute(acc, axis, [(src, dst)])
+        acc = jnp.where(idx == dst, shifted, acc)
+    return acc
+
+
+# ---------------------------------------------------------------------- #
+# ReduceScatter / AllGather (Sec. 6.2 halves, exposed as first-class ops)
+# ---------------------------------------------------------------------- #
+def reduce_scatter_ring(x: jax.Array, axis: str) -> jax.Array:
+    """Ring reduce-scatter: device i ends with the full sum of chunk i
+    (matches ``lax.psum_scatter(..., tiled=True)``).  Leading dim must be
+    divisible by P."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    n = x.shape[0]
+    assert n % p == 0, (n, p)
+    chunks = x.reshape((p, n // p) + x.shape[1:])
+    right = [(i, (i + 1) % p) for i in range(p)]
+
+    def rs_step(t, ch):
+        send_idx = (idx - 1 - t) % p
+        sent = jnp.take(ch, send_idx, axis=0)
+        recv = lax.ppermute(sent, axis, right)
+        recv_idx = (idx - 2 - t) % p
+        return ch.at[recv_idx].set(jnp.take(ch, recv_idx, axis=0) + recv)
+
+    chunks = lax.fori_loop(0, p - 1, rs_step, chunks)
+    return jnp.take(chunks, idx, axis=0)
+
+
+def allgather_ring(x: jax.Array, axis: str) -> jax.Array:
+    """Ring all-gather: out[i*m:(i+1)*m] holds device i's shard (matches
+    ``lax.all_gather(..., tiled=True)``)."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    m = x.shape[0]
+    chunks = jnp.zeros((p,) + x.shape, x.dtype).at[idx].set(x)
+    right = [(i, (i + 1) % p) for i in range(p)]
+
+    def ag_step(t, ch):
+        send_idx = (idx - t) % p
+        sent = jnp.take(ch, send_idx, axis=0)
+        recv = lax.ppermute(sent, axis, right)
+        recv_idx = (idx - t - 1) % p
+        return ch.at[recv_idx].set(recv)
+
+    chunks = lax.fori_loop(0, p - 1, ag_step, chunks)
+    return chunks.reshape((p * m,) + x.shape[1:])
+
+
+def allgather_doubling(x: jax.Array, axis: str) -> jax.Array:
+    """Recursive-doubling all-gather (log2 P rounds, full-buffer sends);
+    latency-optimal for small shards.  P must be a power of two."""
+    p = _axis_size(axis)
+    assert p & (p - 1) == 0, f"doubling allgather needs power-of-two P, {p}"
+    idx = _axis_index(axis)
+    m = x.shape[0]
+    acc = jnp.zeros((p,) + x.shape, x.dtype).at[idx].set(x)
+    slots = jnp.arange(p)
+    step = 1
+    while step < p:
+        pairs = [(i, i ^ step) for i in range(p)]
+        shifted = lax.ppermute(acc, axis, pairs)
+        # partner owned the sibling block of `step` slots; adopt it
+        recv_mask = (slots // step) == ((idx // step) ^ 1)
+        shape = (p,) + (1,) * x.ndim
+        acc = jnp.where(recv_mask.reshape(shape), shifted, acc)
+        step *= 2
+    return acc.reshape((p * m,) + x.shape[1:])
+
+
 # ---------------------------------------------------------------------- #
 # ring AllReduce (Sec. 6.2): reduce-scatter + all-gather
 # ---------------------------------------------------------------------- #
@@ -220,7 +305,69 @@ def schedule_reduce_pipelined(x: jax.Array, axis: str,
     return out[:n] if pad else out
 
 
+def schedule_broadcast(x: jax.Array, axis: str,
+                       rounds: Sequence[Sequence[Tuple[int, int]]]
+                       ) -> jax.Array:
+    """Run a ReduceTree schedule *in reverse* as a broadcast from the
+    tree root: in a reduce, every (child -> parent) send happens after
+    the child has heard from its own children, so the reversed round
+    list visits each edge parent-before-child -- a valid multicast
+    order."""
+    idx = _axis_index(axis)
+    acc = x
+    for sends in reversed(list(rounds)):
+        pairs = [(d, s) for s, d in sends]
+        shifted = lax.ppermute(acc, axis, pairs)
+        dsts = jnp.array([d for _, d in pairs])
+        is_recv = jnp.isin(idx, dsts)
+        acc = jnp.where(is_recv, shifted, acc)
+    return acc
+
+
+def _rotate_rounds(rounds: Sequence[Sequence[Tuple[int, int]]], p: int,
+                   shift: int) -> List[List[Tuple[int, int]]]:
+    return [[((s + shift) % p, (d + shift) % p) for s, d in sends]
+            for sends in rounds]
+
+
+def schedule_reduce_scatter(x: jax.Array, axis: str,
+                            rounds: Sequence[Sequence[Tuple[int, int]]]
+                            ) -> jax.Array:
+    """Auto-Gen reduce-scatter: chunk c runs the root-0 reduce schedule
+    rotated by c, so its sum lands on device c; every device keeps its
+    own chunk.  Semantics match ``lax.psum_scatter(..., tiled=True)``."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    n = x.shape[0]
+    assert n % p == 0, (n, p)
+    chunks = x.reshape((p, n // p) + x.shape[1:])
+    out = []
+    for c in range(p):
+        out.append(schedule_reduce(chunks[c], axis,
+                                   _rotate_rounds(rounds, p, c)))
+    return jnp.take(jnp.stack(out), idx, axis=0)
+
+
+def schedule_allgather(x: jax.Array, axis: str,
+                       rounds: Sequence[Sequence[Tuple[int, int]]]
+                       ) -> jax.Array:
+    """Auto-Gen all-gather: chunk c is broadcast from device c along the
+    reversed reduce schedule rotated by c."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    m = x.shape[0]
+    gathered = []
+    for c in range(p):
+        seeded = jnp.where(idx == c, x, jnp.zeros_like(x))
+        gathered.append(schedule_broadcast(seeded, axis,
+                                           _rotate_rounds(rounds, p, c)))
+    return jnp.concatenate(gathered, axis=0).reshape((p * m,) + x.shape[1:])
+
+
 __all__ = [
     "chain_reduce", "tree_reduce", "two_phase_reduce", "star_reduce",
-    "broadcast", "ring_allreduce", "schedule_reduce",
+    "broadcast", "chain_broadcast", "ring_allreduce",
+    "reduce_scatter_ring", "allgather_ring", "allgather_doubling",
+    "schedule_reduce", "schedule_reduce_pipelined", "schedule_broadcast",
+    "schedule_reduce_scatter", "schedule_allgather",
 ]

@@ -33,9 +33,14 @@ import numpy as np
 from repro.core.model import Fabric, WSE2
 from repro.core.schedule import ReduceTree
 
-_CACHE_DIR = os.environ.get(
-    "REPRO_CACHE_DIR", os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                                    "var", "cache"))
+_DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                                  "..", "var", "cache")
+
+
+def cache_dir() -> str:
+    """On-disk cache root shared by the Auto-Gen tables and the
+    CollectiveEngine decision cache.  Override with REPRO_CACHE_DIR."""
+    return os.environ.get("REPRO_CACHE_DIR", _DEFAULT_CACHE_DIR)
 
 INF = np.float32(np.inf)
 
@@ -81,7 +86,7 @@ def compute_tables(p_max: int, d_max: Optional[int] = None,
     c_small = min(c_small, c_max)
 
     cache_key = f"autogen_P{p_max}_D{d_max}_C{c_max}_ds{d_small}_cs{c_small}"
-    cache_path = os.path.join(_CACHE_DIR, cache_key + ".npz")
+    cache_path = os.path.join(cache_dir(), cache_key + ".npz")
     pairs = _region_pairs(d_max, c_max, d_small, c_small)
     pair_index = {pc: k for k, pc in enumerate(pairs)}
 
@@ -124,7 +129,7 @@ def compute_tables(p_max: int, d_max: Optional[int] = None,
         energy[k, 1] = 0.0
 
     if use_cache:
-        os.makedirs(_CACHE_DIR, exist_ok=True)
+        os.makedirs(cache_dir(), exist_ok=True)
         tmp = cache_path + f".tmp{os.getpid()}.npz"
         np.savez_compressed(tmp, energy=energy, split=split)
         os.replace(tmp, cache_path)
@@ -184,4 +189,5 @@ def autogen_tree(p: int, b: int, fabric: Fabric = WSE2,
     return tree
 
 
-__all__ = ["AutoGenTables", "compute_tables", "t_autogen", "autogen_tree"]
+__all__ = ["AutoGenTables", "cache_dir", "compute_tables", "t_autogen",
+           "autogen_tree"]

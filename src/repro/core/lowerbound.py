@@ -17,11 +17,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.autogen import cache_dir
 from repro.core.model import Fabric, WSE2
-
-_CACHE_DIR = os.environ.get(
-    "REPRO_CACHE_DIR", os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                                    "var", "cache"))
 
 INF = np.float32(np.inf)
 
@@ -37,7 +34,7 @@ def compute_lb_energy(p_max: int, d_max: Optional[int] = None,
         d_max = max(p_max - 1, 1)
     d_max = max(1, min(d_max, max(p_max - 1, 1)))
 
-    cache_path = os.path.join(_CACHE_DIR, f"lb_P{p_max}_D{d_max}.npy")
+    cache_path = os.path.join(cache_dir(), f"lb_P{p_max}_D{d_max}.npy")
     if use_cache and os.path.exists(cache_path):
         return np.load(cache_path)
 
@@ -51,7 +48,7 @@ def compute_lb_energy(p_max: int, d_max: Optional[int] = None,
             cand = e[d, 1:p] + e[d - 1, p - 1:0:-1] + extra
             e[d, p] = cand.min()
     if use_cache:
-        os.makedirs(_CACHE_DIR, exist_ok=True)
+        os.makedirs(cache_dir(), exist_ok=True)
         tmp = cache_path + f".tmp{os.getpid()}.npy"
         np.save(tmp, e)
         os.replace(tmp, cache_path)

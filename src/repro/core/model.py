@@ -39,6 +39,7 @@ class Fabric:
     t_r: float          # ramp latency (cycles) each way between PE and router
     store_cost: float   # cycles to store/add one received element
     link_bw: float = 1.0  # elements per cycle per link (WSE: 1)
+    multicast: bool = True  # WSE routers replicate; ICI must software-fan-out
 
     @property
     def per_depth_cost(self) -> float:
@@ -58,7 +59,8 @@ WSE2 = Fabric(name="wse2", t_r=2.0, store_cost=1.0)
 #: is one 512-byte ICI flit-group; one "cycle" is the time to push it over
 #: one 45 GB/s usable link (~11.4 ns); t_r models the ~1 us per-launch
 #: collective-permute latency expressed in those cycles.
-TPU_V5E_AXIS = Fabric(name="tpu_v5e_axis", t_r=88.0, store_cost=1.0)
+TPU_V5E_AXIS = Fabric(name="tpu_v5e_axis", t_r=88.0, store_cost=1.0,
+                      multicast=False)
 
 
 @dataclasses.dataclass(frozen=True)

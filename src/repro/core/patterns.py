@@ -102,8 +102,14 @@ REDUCE_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
 # ---------------------------------------------------------------------- #
 def t_reduce_then_broadcast(t_reduce: float, p: int, b: int,
                             fabric: Fabric = WSE2) -> float:
-    """Naive AllReduce (Sec. 6.1): T = T_reduce + T_bcast."""
-    return t_reduce + t_broadcast(p, b, fabric)
+    """Naive AllReduce (Sec. 6.1): T = T_reduce + T_bcast.
+
+    The broadcast term honors the fabric: flooding multicast on the WSE
+    (Lemma 4.1), log-depth doubling where multicast is missing (ICI) --
+    that is what the shard_map implementation actually executes."""
+    if fabric.multicast:
+        return t_reduce + t_broadcast(p, b, fabric)
+    return t_reduce + t_doubling_broadcast(p, b, fabric)
 
 
 def t_allreduce(pattern: str, p: int, b: int, fabric: Fabric = WSE2) -> float:
@@ -127,6 +133,67 @@ def t_ring_allreduce(p: int, b: int, fabric: Fabric = WSE2) -> float:
 
 
 ALLREDUCE_PATTERNS = ("star", "chain", "tree", "two_phase", "ring")
+
+
+# ---------------------------------------------------------------------- #
+# ReduceScatter / AllGather / Broadcast variants (engine candidate sets).
+# Costs model the shard_map implementations in collectives/shardmap_impl
+# on a multicast-free fabric (ICI): broadcast is doubling or a serialized
+# chain, ring halves are the two phases of Lemma 6.1.
+# ---------------------------------------------------------------------- #
+def t_ring_reduce_scatter(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """One ring half: P-1 rounds of B/P-element sends around the row."""
+    if p == 1:
+        return 0.0
+    moved = (p - 1) * b / p
+    distance = float(2 * p - 3)
+    return moved + distance + fabric.per_depth_cost * (p - 1)
+
+
+def t_ring_allgather(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Same wire traffic as the reduce-scatter half, minus nothing the
+    model separates -- symmetric phase of Lemma 6.1."""
+    return t_ring_reduce_scatter(p, b, fabric)
+
+
+def t_doubling_allgather(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Recursive doubling: round k ships a 2^k*(B/P) block; log2 P
+    launches."""
+    if p == 1:
+        return 0.0
+    lg = math.ceil(math.log2(p))
+    return b * (p - 1) / p + fabric.per_depth_cost * lg
+
+
+def t_doubling_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Log-depth doubling of the full vector: each of the ceil(log2 P)
+    rounds is a serialized B-element send (no multicast on ICI)."""
+    if p == 1:
+        return 0.0
+    lg = math.ceil(math.log2(p))
+    return lg * b + fabric.per_depth_cost * lg
+
+
+def t_chain_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Unpipelined hop-by-hop relay: P-1 serialized B-element sends."""
+    if p == 1:
+        return 0.0
+    return (p - 1) * (b + fabric.per_depth_cost)
+
+
+REDUCE_SCATTER_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
+    "ring": t_ring_reduce_scatter,
+}
+
+ALLGATHER_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
+    "ring": t_ring_allgather,
+    "doubling": t_doubling_allgather,
+}
+
+BROADCAST_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
+    "doubling": t_doubling_broadcast,
+    "chain": t_chain_broadcast,
+}
 
 
 # ---------------------------------------------------------------------- #
@@ -180,5 +247,8 @@ __all__ = [
     "t_two_phase", "t_autogen_tree", "t_reduce_then_broadcast",
     "t_allreduce", "t_ring_allreduce", "t_broadcast_2d", "t_xy_reduce",
     "t_snake_reduce", "t_xy_allreduce", "t_reduce_bcast_2d",
-    "t_lower_bound_2d", "REDUCE_PATTERNS", "ALLREDUCE_PATTERNS",
+    "t_lower_bound_2d", "t_ring_reduce_scatter", "t_ring_allgather",
+    "t_doubling_allgather", "t_doubling_broadcast", "t_chain_broadcast",
+    "REDUCE_PATTERNS", "ALLREDUCE_PATTERNS", "REDUCE_SCATTER_PATTERNS",
+    "ALLGATHER_PATTERNS", "BROADCAST_PATTERNS",
 ]

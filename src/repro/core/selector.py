@@ -68,6 +68,83 @@ def best_allreduce(p: int, b: int, fabric: Fabric = WSE2,
 
 
 # ---------------------------------------------------------------------- #
+# op-generic prediction: one entry point per collective kind.  This is
+# the seam the CollectiveEngine dispatches through; each op returns the
+# model estimate for every implemented backend.
+# ---------------------------------------------------------------------- #
+def predict_reduce_scatter(p: int, b: int, fabric: Fabric = WSE2,
+                           include_autogen: bool = True,
+                           tables: Optional[AutoGenTables] = None
+                           ) -> Dict[str, float]:
+    preds = {name: fn(p, b, fabric)
+             for name, fn in pat.REDUCE_SCATTER_PATTERNS.items()}
+    if include_autogen and p > 1:
+        # implemented as P rotated per-chunk tree reduces over B/P
+        # elements, serialized in the trace -- model the serialization.
+        t_chunk, _ = t_autogen(p, max(1, -(-b // p)), fabric, tables)
+        preds["autogen"] = p * t_chunk
+    return preds
+
+
+def predict_allgather(p: int, b: int, fabric: Fabric = WSE2,
+                      include_autogen: bool = True,
+                      tables: Optional[AutoGenTables] = None
+                      ) -> Dict[str, float]:
+    preds = {name: fn(p, b, fabric)
+             for name, fn in pat.ALLGATHER_PATTERNS.items()
+             if name != "doubling" or (p & (p - 1)) == 0}
+    if include_autogen and p > 1:
+        # reversed reduce schedule per rotated chunk (see shardmap_impl)
+        t_chunk, _ = t_autogen(p, max(1, -(-b // p)), fabric, tables)
+        preds["autogen"] = p * t_chunk
+    return preds
+
+
+def predict_broadcast(p: int, b: int, fabric: Fabric = WSE2,
+                      include_autogen: bool = True,
+                      tables: Optional[AutoGenTables] = None
+                      ) -> Dict[str, float]:
+    preds = {name: fn(p, b, fabric)
+             for name, fn in pat.BROADCAST_PATTERNS.items()}
+    if include_autogen and p > 1:
+        # broadcast down the reversed Auto-Gen tree costs what the
+        # reduce up it does (same edges, store replaced by copy)
+        preds["autogen"], _ = t_autogen(p, b, fabric, tables)
+    return preds
+
+
+_OP_PREDICTORS = {
+    "reduce": predict_reduce,
+    "allreduce": predict_allreduce,
+    "reduce_scatter": predict_reduce_scatter,
+    "allgather": predict_allgather,
+    "broadcast": predict_broadcast,
+}
+
+COLLECTIVE_OPS = tuple(_OP_PREDICTORS)
+
+
+def predict_collective(op: str, p: int, b: int, fabric: Fabric = WSE2,
+                       include_autogen: bool = True,
+                       tables: Optional[AutoGenTables] = None
+                       ) -> Dict[str, float]:
+    try:
+        fn = _OP_PREDICTORS[op]
+    except KeyError:
+        raise ValueError(f"unknown collective op {op!r}; "
+                         f"expected one of {COLLECTIVE_OPS}") from None
+    return fn(p, b, fabric, include_autogen, tables)
+
+
+def best_collective(op: str, p: int, b: int, fabric: Fabric = WSE2,
+                    include_autogen: bool = True,
+                    tables: Optional[AutoGenTables] = None) -> Selection:
+    preds = predict_collective(op, p, b, fabric, include_autogen, tables)
+    name = min(preds, key=preds.get)
+    return Selection(name, preds[name], preds)
+
+
+# ---------------------------------------------------------------------- #
 # heatmaps (Figs. 8 and 10): best fixed algorithm per (B, P) cell
 # ---------------------------------------------------------------------- #
 def heatmap_1d_allreduce(b_values: Sequence[int], p_values: Sequence[int],
@@ -122,6 +199,8 @@ def optimality_ratios(p: int, b_values: Sequence[int], fabric: Fabric = WSE2,
 
 __all__ = [
     "Selection", "predict_reduce", "best_reduce", "predict_allreduce",
-    "best_allreduce", "heatmap_1d_allreduce", "heatmap_2d_allreduce",
+    "best_allreduce", "predict_reduce_scatter", "predict_allgather",
+    "predict_broadcast", "predict_collective", "best_collective",
+    "COLLECTIVE_OPS", "heatmap_1d_allreduce", "heatmap_2d_allreduce",
     "optimality_ratios",
 ]

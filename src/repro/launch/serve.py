@@ -17,7 +17,10 @@ from typing import Deque, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 
+from repro.collectives.api import get_engine
 from repro.configs import get_config
 from repro.models import decode_step, init_cache, init_params, prefill
 from repro.models.frontend import audio_frames, vision_patches
@@ -36,7 +39,8 @@ class BatchedServer:
     """Fixed-batch continuous decoder over the functional model API."""
 
     def __init__(self, cfg, params, batch_size: int, max_len: int,
-                 seed: int = 0):
+                 seed: int = 0, mesh: Optional[Mesh] = None,
+                 dp_axis: str = "data", engine=None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -48,23 +52,67 @@ class BatchedServer:
         self._decode = jax.jit(
             lambda p, c, b: decode_step(p, cfg, c, b))
         self.key = jax.random.PRNGKey(seed)
+        # data-parallel serving: requests striped over `dp_axis`; the
+        # scheduler needs the *global* token vector to retire/admit, so
+        # per-shard argmaxes are assembled with the engine's cached
+        # model-driven allgather -- serve-path collective traffic flows
+        # through the same dispatch layer as gradient sync.
+        self.mesh = mesh
+        self.dp_axis = dp_axis
+        self._engine = engine
+        self._gather_tokens = None
+        if mesh is not None:
+            if batch_size % mesh.shape[dp_axis] != 0:
+                raise ValueError(
+                    f"batch {batch_size} not divisible by dp axis "
+                    f"{mesh.shape[dp_axis]}")
+            self._engine = engine or get_engine()
+            eng = self._engine
+            # argmax runs on the *local* logits shard; the engine's
+            # allgather is what makes the result global -- the collective
+            # carries genuinely shard-local tokens, as a multi-host DP
+            # serve path requires
+            self._gather_tokens = jax.jit(shard_map(
+                lambda lg: eng.allgather_inside(
+                    jnp.argmax(lg, axis=-1).astype(jnp.int32), dp_axis),
+                mesh=mesh, in_specs=P(dp_axis), out_specs=P(),
+                check_rep=False))
+
+    def _next_tokens(self, logits_last: jax.Array) -> jax.Array:
+        """Greedy sample; in DP mode allgather the shard tokens so every
+        host-side scheduling decision sees the full batch."""
+        if self._gather_tokens is not None:
+            return self._gather_tokens(logits_last)
+        return jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
+
+    def _place(self, batch):
+        if self.mesh is None:
+            return batch
+        sh = NamedSharding(self.mesh, P(self.dp_axis))
+        return {k: jax.device_put(v, sh) for k, v in batch.items()}
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
     def _prefill_batch(self, reqs: List[Request]):
         s = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((len(reqs), s), np.int32)
+        n = len(reqs)
+        if self.mesh is not None:
+            # waves can be smaller than the configured batch (queue
+            # draining); pad to a dp-divisible row count so the sharded
+            # placement and token allgather stay well-formed.  Padded
+            # rows decode garbage nobody reads.
+            dp = self.mesh.shape[self.dp_axis]
+            n += (-n) % dp
+        toks = np.zeros((n, s), np.int32)
         for i, r in enumerate(reqs):
             toks[i, s - len(r.prompt):] = r.prompt  # left-pad
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.family == "encdec":
-            batch["frames"] = audio_frames(self.key, self.cfg,
-                                           len(reqs), s)
+            batch["frames"] = audio_frames(self.key, self.cfg, n, s)
         if self.cfg.frontend == "vision":
-            batch["soft_emb"] = vision_patches(self.key, self.cfg,
-                                               len(reqs))
-        return self._prefill(self.params, batch)
+            batch["soft_emb"] = vision_patches(self.key, self.cfg, n)
+        return self._prefill(self.params, self._place(batch))
 
     def run(self, max_steps: int = 512) -> Dict[int, List[int]]:
         """Serve until queue + active drain (or max_steps)."""
@@ -78,7 +126,7 @@ class BatchedServer:
             if not wave:
                 break
             logits, cache = self._prefill_batch(wave)
-            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            next_tok = self._next_tokens(logits[:, -1])
             for _ in range(max_steps):
                 live = [r for r in wave if not r.done]
                 if not live:
@@ -90,8 +138,7 @@ class BatchedServer:
                             r.done = True
                 logits, cache = self._decode(
                     self.params, cache, {"tokens": next_tok[:, None]})
-                next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(
-                    jnp.int32)
+                next_tok = self._next_tokens(logits[:, 0])
             for r in wave:
                 results[r.rid] = r.out
         return results
@@ -104,11 +151,17 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--dp", action="store_true",
+                    help="stripe the batch over all local devices and "
+                         "route token sync through the CollectiveEngine")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = init_params(jax.random.PRNGKey(0), cfg)
-    server = BatchedServer(cfg, params, args.batch, max_len=256)
+    mesh = None
+    if args.dp:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    server = BatchedServer(cfg, params, args.batch, max_len=256, mesh=mesh)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):

@@ -7,16 +7,20 @@
   slices (keeps the same global batch while bounding live activations);
 * gradient sync: under jit+GSPMD the partitioner inserts the reductions
   implied by the shardings (reduce-scatter under FSDP).  The explicit
-  paper-collective DP path lives in repro.collectives.overlap.
+  paper-collective DP path runs when a ``GradSyncConfig`` is passed:
+  gradients then flow through the CollectiveEngine's cached model-driven
+  dispatch (repro.collectives) instead of GSPMD's defaults.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tf
@@ -24,6 +28,21 @@ from repro.optim.adamw import AdamWConfig, apply_updates
 from repro.train.state import TrainState
 
 AUX_WEIGHT = 0.01
+
+
+@dataclasses.dataclass
+class GradSyncConfig:
+    """Explicit pure-DP gradient synchronization through the engine.
+
+    Params are replicated over ``axes``; after backward, gradients are
+    bucketed and AllReduced with per-bucket-size cached algorithm
+    selection (repro.collectives.overlap.bucketed_allreduce)."""
+
+    mesh: Mesh
+    axes: Tuple[str, ...] = ("data",)
+    algorithm: str = "auto"
+    bucket_bytes: int = 4 * 1024 * 1024
+    compress: bool = False
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -62,7 +81,8 @@ def _split_microbatches(batch, n: int):
 
 def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
                     microbatches: int = 1, remat: bool = True,
-                    unroll: bool = False
+                    unroll: bool = False,
+                    grad_sync: Optional[GradSyncConfig] = None
                     ) -> Callable[[TrainState, Dict[str, jax.Array]],
                                   Tuple[TrainState, Dict[str, jax.Array]]]:
     grad_fn = jax.value_and_grad(
@@ -97,6 +117,16 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
             grads = jax.tree.map(lambda g: g * inv, grads)
             loss = loss * inv
             metrics = {}
+        if grad_sync is not None:
+            # explicit pure-DP sync: every gradient byte goes through the
+            # CollectiveEngine's cached dispatch (import here to keep the
+            # collectives layer optional for GSPMD-only users)
+            from repro.collectives.overlap import bucketed_allreduce
+            grads, _ = bucketed_allreduce(
+                grads, grad_sync.mesh, axes=grad_sync.axes,
+                algorithm=grad_sync.algorithm,
+                bucket_bytes=grad_sync.bucket_bytes,
+                compress=grad_sync.compress)
         params, opt, opt_metrics = apply_updates(
             opt_cfg, state.params, grads, state.opt)
         out = {"loss": loss, **metrics, **opt_metrics}
@@ -118,4 +148,5 @@ def make_decode_step(cfg: ArchConfig, unroll: bool = False):
 
 
 __all__ = ["cross_entropy", "loss_fn", "make_train_step",
-           "make_prefill_step", "make_decode_step", "AUX_WEIGHT"]
+           "make_prefill_step", "make_decode_step", "GradSyncConfig",
+           "AUX_WEIGHT"]

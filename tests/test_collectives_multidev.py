@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.multidev, pytest.mark.slow]
+
 _SCRIPT = r"""
 import functools, json
 import numpy as np, jax, jax.numpy as jnp

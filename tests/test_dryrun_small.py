@@ -7,6 +7,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = [pytest.mark.multidev, pytest.mark.slow]
+
 _SCRIPT = r"""
 import os, json, dataclasses
 import jax
@@ -39,7 +43,9 @@ for name in ("yi-34b", "olmoe-1b-7b", "falcon-mamba-7b",
     with mesh:
         compiled = jax.jit(step, in_shardings=(state_sh, bsh),
                            donate_argnums=(0,)).lower(state_specs, bs).compile()
-    cost = dict(compiled.cost_analysis())
+    ca = compiled.cost_analysis()
+    # jax used to return [dict]; newer versions return the dict itself
+    cost = dict(ca[0] if isinstance(ca, (list, tuple)) else ca)
     coll = parse_collective_bytes(compiled.as_text())
     results[f"{name}/train"] = {
         "flops_positive": float(cost.get("flops", 0)) > 0,

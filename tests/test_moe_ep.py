@@ -6,6 +6,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = [pytest.mark.multidev, pytest.mark.slow]
+
 _SCRIPT = r"""
 import json, dataclasses
 import numpy as np, jax

@@ -1,6 +1,9 @@
 """Property tests (hypothesis) on the Schedule IR invariants."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dep; see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lowerbound import compute_lb_energy, t_lower_bound
@@ -8,30 +11,7 @@ from repro.core.model import WSE2
 from repro.core import patterns as pat
 from repro.core.schedule import (ReduceTree, binary_tree, chain_tree,
                                  star_tree, two_phase_tree)
-
-
-def random_pre_order_tree(p: int, rng) -> ReduceTree:
-    """Random contiguous-interval ordered tree (the Auto-Gen search
-    space)."""
-    parent = [-1] * p
-    children = [[] for _ in range(p)]
-
-    def build(lo: int, hi: int):
-        # vertex `lo` is the root of [lo, hi)
-        rest_lo = lo + 1
-        while rest_lo < hi:
-            split = rng.randint(rest_lo, hi - 1)  # child owns [split, hi)?
-            # choose child interval [rest_lo.. ] -- children get contiguous
-            # blocks in order
-            end = rng.randint(rest_lo + 1, hi)
-            parent[rest_lo] = lo
-            children[lo].append(rest_lo)
-            build(rest_lo, end)
-            rest_lo = end
-        return
-
-    build(0, p)
-    return ReduceTree(parent, children, root=0, label="random")
+from tests.util_trees import random_pre_order_tree
 
 
 @given(st.integers(2, 40), st.randoms(use_true_random=False))

@@ -104,7 +104,7 @@ def test_random_trees_fabric_vs_flow_property():
     queue/arbitration slack), and an exact sum.  Covers the whole
     Auto-Gen schedule space, not just the named patterns."""
     import random as pyrandom
-    from tests.test_schedule import random_pre_order_tree
+    from tests.util_trees import random_pre_order_tree
     rng = pyrandom.Random(0)
     for trial in range(6):
         p = rng.randint(3, 14)

@@ -10,6 +10,8 @@ import pytest
 
 from repro.configs.base import ArchConfig
 
+pytestmark = pytest.mark.slow
+
 
 def tiny_cfg() -> ArchConfig:
     return ArchConfig(name="tiny-dense", family="dense", num_layers=2,

@@ -1,0 +1,33 @@
+"""Shared test helpers for generating random reduction trees.
+
+Lives outside test_schedule.py so tests that don't need hypothesis
+(e.g. the simulator property test) can import it even when the optional
+hypothesis dependency is missing.
+"""
+
+from repro.core.schedule import ReduceTree
+
+
+def random_pre_order_tree(p: int, rng) -> ReduceTree:
+    """Random contiguous-interval ordered tree (the Auto-Gen search
+    space)."""
+    parent = [-1] * p
+    children = [[] for _ in range(p)]
+
+    def build(lo: int, hi: int):
+        # vertex `lo` is the root of [lo, hi)
+        rest_lo = lo + 1
+        while rest_lo < hi:
+            # extra draw kept to preserve the historical rng stream the
+            # simulator property-test tolerances were validated against
+            rng.randint(rest_lo, hi - 1)
+            # children get contiguous blocks in order
+            end = rng.randint(rest_lo + 1, hi)
+            parent[rest_lo] = lo
+            children[lo].append(rest_lo)
+            build(rest_lo, end)
+            rest_lo = end
+        return
+
+    build(0, p)
+    return ReduceTree(parent, children, root=0, label="random")

@@ -1,0 +1,97 @@
+"""Serving benchmark: continuous batching on the reduced config.
+
+Drives the paged-cache server with a mixed-length request sweep and
+emits ``BENCH_serve.json`` (tok/s, TTFT p50/p99, scheduler/KV counters)
+so the perf trajectory has a serving datapoint alongside the collective
+microbenchmarks.  CPU-scale shapes; the numbers track *relative*
+regressions of the serving path, not hardware throughput.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def run(arch: str = "minicpm-2b", batch: int = 4, requests: int = 12,
+        prompt_len: int = 24, new_tokens: int = 12,
+        block_size: int = 16, prefill_chunk: int = 16, seed: int = 0):
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ContinuousBatchingServer, Request
+    from repro.serving.telemetry import Telemetry
+
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_len = prompt_len + new_tokens + block_size
+    server = ContinuousBatchingServer(
+        cfg, params, batch, max_len=max_len, seed=seed,
+        block_size=block_size, prefill_chunk=prefill_chunk)
+    rng = np.random.default_rng(seed)
+
+    # warm the jit caches so TTFT measures scheduling, not compilation
+    server.submit(Request(rid=-1,
+                          prompt=rng.integers(0, cfg.vocab_size,
+                                              prompt_len).astype(np.int32),
+                          max_new_tokens=2))
+    server.run()
+    server.telemetry = Telemetry()      # drop compile-time TTFT samples
+
+    t0 = time.time()
+    for rid in range(requests):
+        # mixed lengths exercise per-step retire/admit
+        n_new = new_tokens if rid % 3 else max(2, new_tokens // 4)
+        server.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                prompt_len).astype(np.int32),
+            max_new_tokens=n_new))
+    results = server.run()
+    wall = time.time() - t0
+    snap = server.snapshot()
+    tokens = sum(len(v) for k, v in results.items() if k >= 0)
+    return {
+        "arch": arch,
+        "batch": batch,
+        "requests": requests,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "block_size": block_size,
+        "tokens_out": tokens,
+        "wall_s": wall,
+        "tok_per_s": tokens / wall,
+        "ttft_p50_ms": snap.ttft_p50_ms,
+        "ttft_p99_ms": snap.ttft_p99_ms,
+        "decode_steps": snap.decode_steps,
+        "prefill_chunks": snap.prefill_chunks,
+        "preemptions": snap.preemptions,
+        "kv_peak_occupancy": snap.kv_peak_occupancy,
+    }
+
+
+def main(out_path: str = "BENCH_serve.json"):
+    res = run()
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=2)
+    emit("serve/tok_per_s", 0.0, f"{res['tok_per_s']:.1f}tok/s")
+    emit("serve/ttft_p50", res["ttft_p50_ms"] * 1e3,
+         f"{res['ttft_p50_ms']:.1f}ms")
+    emit("serve/ttft_p99", res["ttft_p99_ms"] * 1e3,
+         f"{res['ttft_p99_ms']:.1f}ms")
+    emit("serve/decode_steps", 0.0, str(res["decode_steps"]))
+    print(f"# wrote {os.path.abspath(out_path)}")
+    assert res["tokens_out"] > 0 and res["tok_per_s"] > 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    main(args.out)

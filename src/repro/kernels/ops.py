@@ -10,9 +10,10 @@ import jax
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import multi_add as _ma
+from repro.kernels import paged_attention as _pa
 from repro.kernels import selective_scan as _ss
 from repro.kernels.ref import (flash_attention_ref, multi_add_ref,
-                               selective_scan_ref)
+                               paged_attention_ref, selective_scan_ref)
 
 
 def _default_interpret() -> bool:
@@ -37,6 +38,15 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                                interpret=interpret)
 
 
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    interpret: bool | None = None):
+    """Block-indexed decode attention over a paged KV cache."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               interpret=interpret)
+
+
 def selective_scan(dt, x, b, c, a, h0, *,
                    block_d: int = _ss.DEFAULT_BLOCK_D,
                    chunk: int = _ss.DEFAULT_CHUNK,
@@ -54,5 +64,6 @@ def selective_scan(dt, x, b, c, a, h0, *,
                               chunk=chunk, interpret=interpret)
 
 
-__all__ = ["multi_add", "flash_attention", "selective_scan",
-           "multi_add_ref", "flash_attention_ref", "selective_scan_ref"]
+__all__ = ["multi_add", "flash_attention", "paged_attention",
+           "selective_scan", "multi_add_ref", "flash_attention_ref",
+           "paged_attention_ref", "selective_scan_ref"]

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: block-indexed decode attention over a paged KV
+cache (vLLM-style PagedAttention, retargeted to the repo's serving
+subsystem).
+
+The physical cache is a pool of fixed-size blocks ``[N, bs, Hkv, D]``;
+each request owns a *block table* of pool indices.  The kernel never
+materializes the gathered per-request context: the block table and the
+per-request lengths are **scalar-prefetched** so the BlockSpec index map
+can DMA exactly the blocks a request references, one block per grid
+step, with an online-softmax accumulator carried in VMEM scratch.
+
+Blocking: grid = (B, Hkv, M) with M = blocks-per-request sequential so
+the running max/denominator/accumulator scratch carries across a
+request's blocks.  Per-step VMEM working set is
+
+    q tile (group, d) + k block (bs, d) + v block (bs, d) + acc f32
+
+where group = H/Hkv (the GQA query group that shares one KV head).
+Blocks past a request's length are skipped entirely via ``pl.when``
+(short requests in a long-max-len batch cost only their own blocks).
+
+The pure-jnp oracle is ``repro.kernels.ref.paged_attention_ref``; the
+serving decode path (`repro.models.paged`) uses the gathered-jnp
+fallback off-TPU and this kernel on TPU (``ops.paged_attention``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, block_size: int,
+                  blocks_per_seq: int):
+    b = pl.program_id(0)
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, m_scr.dtype)
+        l_scr[...] = jnp.zeros(l_scr.shape, l_scr.dtype)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, acc_scr.dtype)
+
+    length = lengths_ref[b]
+
+    @pl.when(bi * block_size < length)
+    def _update():
+        q = q_ref[0].astype(jnp.float32) * scale       # (group, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        k_ids = bi * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = k_ids < length
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[...][:, :1]                     # (group, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(mask, s - safe_m, _NEG_INF))
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - safe_m), 0.0)
+        l_new = l_scr[...][:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(bi == blocks_per_seq - 1)
+    def _finalize():
+        l = l_scr[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """[B, H, D] x pool [N, bs, Hkv, D] block-indexed decode attention.
+
+    ``block_tables``: [B, M] int32 pool indices in logical order;
+    ``lengths``: [B] int32 valid tokens per request.  Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    n, bs, hkv, dk = k_pages.shape
+    assert d == dk and h % hkv == 0, (q.shape, k_pages.shape)
+    group = h // hkv
+    m = block_tables.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, block_size=bs,
+                               blocks_per_seq=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, group, d),
+                         lambda bb, hh, ii, tables, lens: (bb, hh, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bb, hh, ii, tables, lens:
+                         (tables[bb, ii], 0, hh, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bb, hh, ii, tables, lens:
+                         (tables[bb, ii], 0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d),
+                               lambda bb, hh, ii, tables, lens: (bb, hh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 128), jnp.float32),   # running max
+            pltpu.VMEM((group, 128), jnp.float32),   # running denom
+            pltpu.VMEM((group, d), jnp.float32),     # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+__all__ = ["paged_attention"]

@@ -44,6 +44,37 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Block-indexed decode-attention oracle (paged KV cache).
+
+    ``q``: [B, H, D] single-position queries; ``k_pages``/``v_pages``:
+    [N, bs, Hkv, D] physical block pool; ``block_tables``: [B, M] int32
+    per-request block ids (logical order); ``lengths``: [B] int32 valid
+    context per request.  Returns [B, H, D].  Supports GQA.
+    """
+    n, bs, hkv, d = k_pages.shape
+    b, h, _ = q.shape
+    m = block_tables.shape[1]
+    group = h // hkv
+    idx = (block_tables[:, :, None] * bs
+           + jnp.arange(bs)[None, None, :]).reshape(b, m * bs)
+    k = k_pages.reshape(n * bs, hkv, d)[idx]          # [B, S, Hkv, D]
+    v = v_pages.reshape(n * bs, hkv, d)[idx]
+    kf = jnp.repeat(jnp.moveaxis(k, 1, 2).astype(jnp.float32), group,
+                    axis=1)                            # [B, H, S, D]
+    vf = jnp.repeat(jnp.moveaxis(v, 1, 2).astype(jnp.float32), group,
+                    axis=1)
+    qf = q.astype(jnp.float32) / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhkd->bhk", qf, kf)
+    mask = jnp.arange(m * bs)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
 def selective_scan_ref(dt: jax.Array, x: jax.Array, b: jax.Array,
                        c: jax.Array, a: jax.Array, h0: jax.Array):
     """Oracle for the fused Mamba scan: plain sequential recurrence.
@@ -70,4 +101,5 @@ def selective_scan_ref(dt: jax.Array, x: jax.Array, b: jax.Array,
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
 
 
-__all__ = ["multi_add_ref", "flash_attention_ref", "selective_scan_ref"]
+__all__ = ["multi_add_ref", "flash_attention_ref", "paged_attention_ref",
+           "selective_scan_ref"]

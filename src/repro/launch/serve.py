@@ -1,147 +1,32 @@
-"""Serving driver: batched prefill + decode with a continuous-batching
-request queue (CPU-scale; the dry-run proves the production shapes).
+"""Serving CLI: a thin driver over ``repro.serving`` (paged KV cache +
+true continuous batching; CPU-scale here, the dry-run proves the
+production shapes).
 
-Requests arrive with different prompts; the scheduler packs them into a
-fixed batch, prefills, then decodes tokens step by step, retiring
-finished requests and admitting queued ones into freed slots.
+Requests arrive with different prompts and lengths; the scheduler
+admits and retires them *every decode step* -- a short request frees
+its slot mid-flight and a queued request takes it over while longer
+requests keep decoding.  With ``--dp`` the slot rows are striped over
+all local devices and per-shard sampled tokens are assembled with the
+CollectiveEngine's cached model-driven allgather, so serve traffic
+exercises the same dispatch layer as gradient sync.
+
+The legacy names (``BatchedServer``, ``Request``) are the serving
+subsystem's classes re-exported; the old static wave-batcher is gone.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.collectives.api import get_engine
 from repro.configs import get_config
-from repro.models import decode_step, init_cache, init_params, prefill
-from repro.models.frontend import audio_frames, vision_patches
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # [S] int32
-    max_new_tokens: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class BatchedServer:
-    """Fixed-batch continuous decoder over the functional model API."""
-
-    def __init__(self, cfg, params, batch_size: int, max_len: int,
-                 seed: int = 0, mesh: Optional[Mesh] = None,
-                 dp_axis: str = "data", engine=None):
-        self.cfg = cfg
-        self.params = params
-        self.batch = batch_size
-        self.max_len = max_len
-        self.queue: Deque[Request] = deque()
-        self.active: List[Optional[Request]] = [None] * batch_size
-        self._prefill = jax.jit(
-            lambda p, b: prefill(p, cfg, b))
-        self._decode = jax.jit(
-            lambda p, c, b: decode_step(p, cfg, c, b))
-        self.key = jax.random.PRNGKey(seed)
-        # data-parallel serving: requests striped over `dp_axis`; the
-        # scheduler needs the *global* token vector to retire/admit, so
-        # per-shard argmaxes are assembled with the engine's cached
-        # model-driven allgather -- serve-path collective traffic flows
-        # through the same dispatch layer as gradient sync.
-        self.mesh = mesh
-        self.dp_axis = dp_axis
-        self._engine = engine
-        self._gather_tokens = None
-        if mesh is not None:
-            if batch_size % mesh.shape[dp_axis] != 0:
-                raise ValueError(
-                    f"batch {batch_size} not divisible by dp axis "
-                    f"{mesh.shape[dp_axis]}")
-            self._engine = engine or get_engine()
-            eng = self._engine
-            # argmax runs on the *local* logits shard; the engine's
-            # allgather is what makes the result global -- the collective
-            # carries genuinely shard-local tokens, as a multi-host DP
-            # serve path requires
-            self._gather_tokens = jax.jit(shard_map(
-                lambda lg: eng.allgather_inside(
-                    jnp.argmax(lg, axis=-1).astype(jnp.int32), dp_axis),
-                mesh=mesh, in_specs=P(dp_axis), out_specs=P(),
-                check_rep=False))
-
-    def _next_tokens(self, logits_last: jax.Array) -> jax.Array:
-        """Greedy sample; in DP mode allgather the shard tokens so every
-        host-side scheduling decision sees the full batch."""
-        if self._gather_tokens is not None:
-            return self._gather_tokens(logits_last)
-        return jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
-
-    def _place(self, batch):
-        if self.mesh is None:
-            return batch
-        sh = NamedSharding(self.mesh, P(self.dp_axis))
-        return {k: jax.device_put(v, sh) for k, v in batch.items()}
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _prefill_batch(self, reqs: List[Request]):
-        s = max(len(r.prompt) for r in reqs)
-        n = len(reqs)
-        if self.mesh is not None:
-            # waves can be smaller than the configured batch (queue
-            # draining); pad to a dp-divisible row count so the sharded
-            # placement and token allgather stay well-formed.  Padded
-            # rows decode garbage nobody reads.
-            dp = self.mesh.shape[self.dp_axis]
-            n += (-n) % dp
-        toks = np.zeros((n, s), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, s - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.family == "encdec":
-            batch["frames"] = audio_frames(self.key, self.cfg, n, s)
-        if self.cfg.frontend == "vision":
-            batch["soft_emb"] = vision_patches(self.key, self.cfg, n)
-        return self._prefill(self.params, self._place(batch))
-
-    def run(self, max_steps: int = 512) -> Dict[int, List[int]]:
-        """Serve until queue + active drain (or max_steps)."""
-        results: Dict[int, List[int]] = {}
-        while self.queue or any(self.active):
-            # admit up to `batch` requests (simple static batching per
-            # wave; slots refill between waves)
-            wave: List[Request] = []
-            while self.queue and len(wave) < self.batch:
-                wave.append(self.queue.popleft())
-            if not wave:
-                break
-            logits, cache = self._prefill_batch(wave)
-            next_tok = self._next_tokens(logits[:, -1])
-            for _ in range(max_steps):
-                live = [r for r in wave if not r.done]
-                if not live:
-                    break
-                for i, r in enumerate(wave):
-                    if not r.done:
-                        r.out.append(int(next_tok[i]))
-                        if len(r.out) >= r.max_new_tokens:
-                            r.done = True
-                logits, cache = self._decode(
-                    self.params, cache, {"tokens": next_tok[:, None]})
-                next_tok = self._next_tokens(logits[:, 0])
-            for r in wave:
-                results[r.rid] = r.out
-        return results
+from repro.models import init_params
+from repro.models.frontend import vision_patches
+from repro.serving import (ContinuousBatchingServer as BatchedServer,
+                           Request, SamplingParams)
 
 
 def main():
@@ -151,30 +36,63 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--dp", action="store_true",
-                    help="stripe the batch over all local devices and "
-                         "route token sync through the CollectiveEngine")
+                    help="stripe the slot rows over all local devices "
+                         "and route token sync through the "
+                         "CollectiveEngine")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    from repro.models import supports_paged
+    if not supports_paged(cfg):
+        ap.error(
+            f"--arch {args.arch} (family {cfg.family!r}) is not servable "
+            f"yet: the paged KV cache covers dense/moe decoder families "
+            f"(constant-state families keep the dense training cache)")
     params = init_params(jax.random.PRNGKey(0), cfg)
     mesh = None
+    batch = args.batch
     if args.dp:
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    server = BatchedServer(cfg, params, args.batch, max_len=256, mesh=mesh)
+        ndev = len(jax.devices())
+        mesh = jax.make_mesh((ndev,), ("data",))
+        if batch % ndev:
+            batch += -batch % ndev
+            print(f"[serve] rounding batch to {batch} "
+                  f"(dp axis = {ndev} devices)")
+    max_len = args.prompt_len + args.new_tokens + cfg.frontend_tokens + \
+        args.block_size
+    server = BatchedServer(cfg, params, batch, max_len=max_len, mesh=mesh,
+                           block_size=args.block_size,
+                           prefill_chunk=args.prefill_chunk,
+                           top_k=args.top_k)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):
+        soft = None
+        if cfg.frontend == "vision":
+            soft = vision_patches(jax.random.PRNGKey(rid), cfg, 1)
         server.submit(Request(
             rid=rid,
             prompt=rng.integers(0, cfg.vocab_size,
                                 size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.new_tokens))
+            max_new_tokens=args.new_tokens,
+            sampling=SamplingParams(temperature=args.temperature),
+            soft_emb=soft))
     results = server.run()
     dt = time.time() - t0
+    snap = server.snapshot()
     total = sum(len(v) for v in results.values())
     print(f"[serve] {len(results)} requests, {total} tokens in {dt:.1f}s "
           f"({total / dt:.1f} tok/s)")
+    print(f"[serve] ttft p50={snap.ttft_p50_ms:.0f}ms "
+          f"p99={snap.ttft_p99_ms:.0f}ms | decode steps "
+          f"{snap.decode_steps} | prefill chunks {snap.prefill_chunks} | "
+          f"preemptions {snap.preemptions} | peak kv occupancy "
+          f"{snap.kv_peak_occupancy:.2f}")
     for rid in sorted(results)[:3]:
         print(f"  req {rid}: {results[rid][:8]}...")
 

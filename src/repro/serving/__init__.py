@@ -1,0 +1,23 @@
+"""Production serving subsystem: paged KV cache + continuous batching.
+
+Components (see README "Serving"):
+
+* ``blocks``    -- fixed-size KV block allocator + per-request tables
+* ``sampling``  -- greedy / temperature / top-k token sampling
+* ``scheduler`` -- per-step admit/retire, chunked prefill, preemption
+* ``server``    -- jitted paged-model execution; DP token assembly
+                   through the CollectiveEngine
+* ``telemetry`` -- TTFT / tok/s / queue depth / KV occupancy snapshots
+"""
+
+from repro.serving.blocks import BlockAllocator, BlockTable
+from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.scheduler import PrefillChunk, Request, Scheduler
+from repro.serving.server import ContinuousBatchingServer
+from repro.serving.telemetry import Telemetry, TelemetrySnapshot
+
+__all__ = [
+    "BlockAllocator", "BlockTable", "ContinuousBatchingServer",
+    "PrefillChunk", "Request", "SamplingParams", "Scheduler",
+    "Telemetry", "TelemetrySnapshot", "sample_tokens",
+]

@@ -1,0 +1,113 @@
+"""Fixed-size KV block allocator.
+
+The physical cache (``repro.models.paged.init_pages``) is a pool of
+``num_blocks`` blocks of ``block_size`` token slots each.  The allocator
+hands out block ids; per-request ownership is a ``BlockTable`` (the
+logical-order id list the model indexes with).  Block 0 is reserved as
+the scratch sink for writes from padded/inactive rows and is never
+allocated.
+
+Allocation is all-or-nothing (``alloc(n)`` returns ``None`` when fewer
+than n blocks are free) so the scheduler can make admit/preempt
+decisions atomically.  Blocks are fixed-size, so there is no external
+fragmentation; the only waste is *internal* (tail slots of a request's
+last block), reported by ``internal_fragmentation``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+RESERVED_BLOCKS = 1     # block 0: scratch sink for invalid writes
+
+
+class BlockAllocator:
+    """LIFO free-list over the physical block pool."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < RESERVED_BLOCKS + 1:
+            raise ValueError(f"need > {RESERVED_BLOCKS} blocks, "
+                             f"got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO keeps recently-freed (cache-warm) blocks hot
+        self._free: List[int] = list(range(num_blocks - 1,
+                                           RESERVED_BLOCKS - 1, -1))
+        self._used: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (pool minus the scratch block)."""
+        return self.num_blocks - RESERVED_BLOCKS
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    @property
+    def occupancy(self) -> float:
+        return self.num_used / max(1, self.capacity)
+
+    def blocks_for(self, num_tokens: int) -> int:
+        return -(-max(num_tokens, 0) // self.block_size)
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """n block ids, or None if fewer than n are free (no partial
+        grants)."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for blk in blocks:
+            if blk not in self._used:
+                raise ValueError(f"double free or foreign block {blk}")
+            self._used.remove(blk)
+            self._free.append(blk)
+
+    def internal_fragmentation(self, context_lens: List[int]) -> int:
+        """Allocated-but-unused token slots, given each live request's
+        context length (assumes minimal block counts)."""
+        waste = 0
+        for n in context_lens:
+            waste += self.blocks_for(n) * self.block_size - n
+        return waste
+
+
+class BlockTable:
+    """One request's logical-order block ids."""
+
+    def __init__(self, allocator: BlockAllocator):
+        self._alloc = allocator
+        self.blocks: List[int] = []
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.blocks) * self._alloc.block_size
+
+    def grow(self, n_blocks: int) -> bool:
+        got = self._alloc.alloc(n_blocks)
+        if got is None:
+            return False
+        self.blocks.extend(got)
+        return True
+
+    def ensure_capacity(self, num_tokens: int) -> bool:
+        need = self._alloc.blocks_for(num_tokens) - len(self.blocks)
+        return need <= 0 or self.grow(need)
+
+    def release(self) -> None:
+        if self.blocks:
+            self._alloc.free(self.blocks)
+            self.blocks = []
+
+
+__all__ = ["RESERVED_BLOCKS", "BlockAllocator", "BlockTable"]

@@ -1,0 +1,65 @@
+"""Token sampling for the serving path: greedy / temperature / top-k.
+
+Keys are derived per *request token*, not per batch step:
+``fold_in(server_key, sample_id)`` with ``sample_id`` unique to
+(request, position).  Sampling is therefore invariant to scheduling --
+the same request emits the same tokens whether it runs alone, in a full
+batch, or sharded over a DP axis (the ids travel with the rows), which
+is what lets the DP-vs-local serving equivalence test hold for
+stochastic sampling too.
+
+``temperature <= 0`` means greedy, per row; ``top_k`` is per row too
+(0 = full vocabulary), so mixed batches are one jitted call with
+temperature/top-k arrays riding alongside the rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration."""
+    temperature: float = 0.0    # <= 0: greedy
+    top_k: int = 0              # 0: server default (or full vocab)
+
+
+def sample_tokens(logits: jax.Array, sample_ids: jax.Array,
+                  temperatures: jax.Array, key: jax.Array,
+                  top_ks: jax.Array | int = 0) -> jax.Array:
+    """logits [B, V] -> tokens [B] int32.
+
+    Rows with temperature <= 0 take the argmax; others sample from
+    softmax(logits / T) restricted to their top-k logits when their
+    ``top_ks`` entry is > 0 (scalar top_ks broadcasts to the batch).
+    """
+    logits = logits.astype(jnp.float32)
+    b, v = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if isinstance(top_ks, int):
+        # static k: resolve at trace time (k == 0 skips the sort)
+        if 0 < top_ks < v:
+            kth = jnp.sort(logits, axis=-1)[:, -top_ks][:, None]
+            logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    else:
+        # per-row k-th largest as the cutoff; k == 0 disables the filter
+        k = jnp.clip(top_ks.astype(jnp.int32), 0, v)
+        ordered = jnp.sort(logits, axis=-1)                # ascending
+        kth = jnp.take_along_axis(
+            ordered, jnp.maximum(v - k, 0)[:, None], axis=-1)  # [B, 1]
+        kth = jnp.where((k > 0)[:, None], kth, -jnp.inf)
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    scaled = logits / jnp.maximum(temperatures, 1e-6)[:, None]
+
+    def one(sid, row):
+        return jax.random.categorical(jax.random.fold_in(key, sid), row)
+
+    sampled = jax.vmap(one)(sample_ids, scaled).astype(jnp.int32)
+    return jnp.where(temperatures > 0, sampled, greedy)
+
+
+__all__ = ["SamplingParams", "sample_tokens"]

@@ -1,0 +1,240 @@
+"""Continuous-batching scheduler: admit and retire every decode step.
+
+Pure host-side bookkeeping (no jax): the scheduler owns the slot array,
+the request queue, and the block accounting; the ``Server`` executes the
+plan it produces.  Policies:
+
+* **Iteration-level scheduling** -- finished requests release their
+  slot + blocks at the top of every step and queued requests are
+  admitted into freed slots *in the same step* (no waves, no padding
+  rows decoding garbage: idle slots are masked to the scratch block).
+* **Chunked prefill** -- admitted requests stream their prompt in
+  fixed-size chunks, at most ``prefill_per_step`` chunks per iteration
+  while decode is active (long prompts never stall token emission);
+  when nothing is decoding, the full idle capacity prefills.
+* **Out-of-blocks preemption** -- when a running request cannot get a
+  block to grow its context, the latest-admitted active request is
+  preempted vLLM-recompute-style: its blocks are freed and it is
+  re-queued at the front with ``prompt + generated`` as the new prompt
+  context.  Sampling keys are per (request, position), so the replay
+  reuses the keys of the original run: greedy replays are token-exact;
+  stochastic replays match up to the fp32-level agreement between the
+  prefill and decode attention paths (a draw sitting exactly on a
+  categorical boundary could differ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.blocks import BlockAllocator, BlockTable
+from repro.serving.sampling import SamplingParams
+
+QUEUED = "queued"
+PREFILLING = "prefilling"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    The leading fields match the legacy ``launch.serve.Request`` wire
+    format (rid, prompt, max_new_tokens, out, done); the rest is
+    scheduler-managed runtime state.
+    """
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    sampling: SamplingParams = SamplingParams()
+    soft_emb: Optional[Any] = None      # [1, n_soft, D] vision embeddings
+
+    state: str = QUEUED
+    table: Optional[BlockTable] = None
+    ctx_len: int = 0                    # positions in cache (incl. soft)
+    prefilled: int = 0                  # replay tokens already cached
+    arrival_t: float = 0.0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    admit_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    _admit_seq: int = -1
+
+    @property
+    def n_soft(self) -> int:
+        return 0 if self.soft_emb is None else int(self.soft_emb.shape[1])
+
+    @property
+    def replay_tokens(self) -> np.ndarray:
+        """Prompt context to (re)prefill: prompt plus anything already
+        generated (recompute-style preemption resumes through here)."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out, np.int32)])
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    req: Request
+    start: int      # offset into replay_tokens
+    length: int     # valid tokens this chunk (<= prefill_chunk)
+
+
+class Scheduler:
+    def __init__(self, batch_size: int, allocator: BlockAllocator,
+                 max_blocks_per_seq: int, prefill_chunk: int,
+                 prefill_per_step: int = 1):
+        self.batch_size = batch_size
+        self.allocator = allocator
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.prefill_chunk = prefill_chunk
+        self.prefill_per_step = prefill_per_step
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.queue: Deque[Request] = deque()
+        self._admit_seq = 0
+
+    # ------------------------------------------------------------------ #
+    def validate(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            # the first sampled token comes from the last *token*
+            # position of the prefill; an empty prompt has none
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens < 1")
+        total = req.n_soft + len(req.prompt) + req.max_new_tokens
+        max_tokens = self.max_blocks_per_seq * self.allocator.block_size
+        if total > max_tokens:
+            raise ValueError(
+                f"request {req.rid}: {total} tokens exceeds max_len "
+                f"{max_tokens}")
+        if self.allocator.blocks_for(total) > self.allocator.capacity:
+            raise ValueError(
+                f"request {req.rid}: needs "
+                f"{self.allocator.blocks_for(total)} blocks, pool has "
+                f"{self.allocator.capacity}")
+
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        self.validate(req)
+        req.arrival_t = time.monotonic() if now is None else now
+        req.state = QUEUED
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------ #
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(self.slots)
+
+    def active(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def running(self) -> List[Tuple[int, Request]]:
+        """Decodable rows: RUNNING and not already done (a request can
+        finish at prefill time and must not decode before retiring)."""
+        return [(i, r) for i, r in self.active()
+                if r.state == RUNNING and not r.done]
+
+    def any_running(self) -> bool:
+        return bool(self.running())
+
+    def context_lens(self) -> List[int]:
+        return [r.ctx_len for _, r in self.active()]
+
+    # ------------------------------------------------------------------ #
+    def retire_finished(self) -> List[Request]:
+        """Free slots + blocks of done requests (called every step)."""
+        out = []
+        for i, req in enumerate(self.slots):
+            if req is not None and req.done:
+                req.table.release()
+                req.state = FINISHED
+                self.slots[i] = None
+                out.append(req)
+        return out
+
+    def admit(self, step: int) -> List[Request]:
+        """FCFS-fill free slots from the queue; all-or-nothing block
+        grants keep admission atomic.  Stops at the first request that
+        does not fit (no starvation of large requests)."""
+        admitted = []
+        for i in range(self.batch_size):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            table = BlockTable(self.allocator)
+            need = self.allocator.blocks_for(
+                req.n_soft + len(req.replay_tokens))
+            if not table.grow(max(need, 1)):
+                break
+            self.queue.popleft()
+            req.table = table
+            req.state = PREFILLING
+            req.ctx_len = 0
+            req.prefilled = 0
+            req.admit_step = step if req.admit_step is None else \
+                req.admit_step
+            req._admit_seq = self._admit_seq
+            self._admit_seq += 1
+            self.slots[i] = req
+            admitted.append(req)
+        return admitted
+
+    def prefill_plan(self) -> List[PrefillChunk]:
+        """Next prompt chunks: ``prefill_per_step`` while decode is
+        live, otherwise the whole idle batch prefills."""
+        budget = (self.prefill_per_step if self.any_running()
+                  else self.batch_size)
+        plan = []
+        pref = [r for _, r in self.active() if r.state == PREFILLING]
+        pref.sort(key=lambda r: r._admit_seq)
+        for req in pref[:budget]:
+            replay = req.replay_tokens
+            n = min(self.prefill_chunk, len(replay) - req.prefilled)
+            plan.append(PrefillChunk(req, req.prefilled, n))
+        return plan
+
+    # ------------------------------------------------------------------ #
+    def _preempt(self, req: Request) -> None:
+        """Recompute-style: drop the cache, re-queue at the front."""
+        req.table.release()
+        req.table = None
+        req.state = QUEUED
+        req.ctx_len = 0
+        req.prefilled = 0
+        for i, r in enumerate(self.slots):
+            if r is req:
+                self.slots[i] = None
+        self.queue.appendleft(req)
+
+    def grow_for_decode(self) -> List[Request]:
+        """Ensure every running request has a slot for its next token,
+        preempting the latest-admitted active request on exhaustion."""
+        preempted = []
+        for _, req in self.running():
+            # an earlier row's growth may have preempted this one
+            # (state left RUNNING only while it still owns its slot)
+            while req.state == RUNNING and not req.done and \
+                    not req.table.ensure_capacity(req.ctx_len + 1):
+                # done-but-unretired requests are not preemptible: a
+                # replay would generate past max_new_tokens (their
+                # blocks free at the next retire anyway)
+                victims = [r for _, r in self.active()
+                           if r.state in (PREFILLING, RUNNING)
+                           and not r.done]
+                victim = max(victims, key=lambda r: r._admit_seq)
+                self._preempt(victim)
+                preempted.append(victim)
+                if victim is req:
+                    break
+        return preempted
+
+
+__all__ = ["Request", "PrefillChunk", "Scheduler",
+           "QUEUED", "PREFILLING", "RUNNING", "FINISHED"]

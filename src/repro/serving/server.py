@@ -1,0 +1,306 @@
+"""The serving engine: paged KV cache + continuous batching over the
+CollectiveEngine.
+
+``ContinuousBatchingServer`` glues the host-side ``Scheduler`` to the
+jitted paged model entry points (``repro.models.paged``):
+
+* one jitted **prefill-chunk** program ([1, chunk] tokens, so every
+  prompt length reuses the same executable),
+* one jitted **decode** program over the full slot array ([B, 1]),
+  idle slots masked to the scratch block,
+* one jitted **sample(+gather)** program.
+
+Data-parallel serving (``mesh=``) stripes the slot rows over the DP
+axis.  Every host-side scheduling decision needs the *global* token
+vector, so per-shard sampled tokens are assembled with the
+CollectiveEngine's cached model-driven allgather -- the serve path
+generates real per-step collective traffic through the same dispatch
+layer as gradient sync (no bare ``jax.lax`` collectives anywhere in
+this package).  Sampling keys travel with the rows (per
+(request, position) ids), so DP and single-device serving emit
+identical tokens.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.collectives.api import get_engine
+from repro.models.paged import (decode_step_paged, forward_paged,
+                                init_pages, supports_paged)
+from repro.serving.blocks import BlockAllocator
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import (PrefillChunk, Request, Scheduler,
+                                     RUNNING)
+from repro.serving.telemetry import Telemetry, TelemetrySnapshot
+
+#: sample-id stride per request; bounds max_new_tokens per request.
+#: ids wrap modulo 2^31 (int32 PRNG fold-in data), so key reuse across
+#: requests is possible every 2^31/stride rids -- a statistical, not a
+#: correctness, concern (determinism only needs ids to be a pure
+#: function of (rid, position))
+_SAMPLE_STRIDE = 1 << 20
+_SAMPLE_MOD = 1 << 31
+
+
+class ContinuousBatchingServer:
+    """Paged-cache continuous-batching server over the functional
+    model API (the legacy ``BatchedServer`` constructor signature)."""
+
+    def __init__(self, cfg, params, batch_size: int, max_len: int,
+                 seed: int = 0, mesh: Optional[Mesh] = None,
+                 dp_axis: str = "data", engine=None, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 32, prefill_per_step: int = 1,
+                 top_k: int = 0, use_kernel: Optional[bool] = None):
+        if not supports_paged(cfg):
+            raise NotImplementedError(
+                f"serving supports dense/moe decoder families, not "
+                f"{cfg.family!r}")
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.max_blocks_per_seq = -(-max_len // block_size)
+        if num_blocks is None:
+            num_blocks = batch_size * self.max_blocks_per_seq + 1
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self.scheduler = Scheduler(batch_size, self.allocator,
+                                   self.max_blocks_per_seq, prefill_chunk,
+                                   prefill_per_step)
+        self.telemetry = Telemetry()
+        self.top_k = top_k          # default for requests with top_k=0
+        self.key = jax.random.PRNGKey(seed)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self._step = 0
+
+        self.mesh = mesh
+        self.dp_axis = dp_axis
+        self._engine = engine
+        self.pages = init_pages(cfg, num_blocks, block_size)
+        if mesh is not None:
+            if batch_size % mesh.shape[dp_axis] != 0:
+                raise ValueError(
+                    f"batch {batch_size} not divisible by dp axis "
+                    f"{mesh.shape[dp_axis]}")
+            self._engine = engine or get_engine()
+            self._row_sharding = NamedSharding(mesh, P(dp_axis))
+            # replicate the block pool across the DP shards up front so
+            # every program runs on the mesh from the first call
+            self.pages = jax.device_put(self.pages, NamedSharding(mesh, P()))
+
+        key = self.key
+
+        def _prefill(params, pages, tokens, bt, ctx, new_len, soft=None):
+            batch = {"tokens": tokens}
+            if soft is not None:
+                batch["soft_emb"] = soft
+            return forward_paged(params, cfg, pages, batch, bt, ctx,
+                                 new_len, use_kernel=False)
+
+        # the page pool is dead after each call (run() reassigns it), so
+        # donate it where the backend supports donation -- decode then
+        # updates the cache in place instead of copying the whole pool
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=donate)
+        self._decode_fn = jax.jit(
+            lambda p, pg, t, b, c: decode_step_paged(
+                p, cfg, pg, {"tokens": t}, b, c, use_kernel=use_kernel),
+            donate_argnums=donate)
+        self._sample_fn = jax.jit(
+            lambda lg, sid, tmp, tk: sample_tokens(lg, sid, tmp, key, tk))
+        # batches with no top-k row skip the cutoff sort (trace-time 0)
+        self._sample_notopk_fn = jax.jit(
+            lambda lg, sid, tmp: sample_tokens(lg, sid, tmp, key, 0))
+        # all-greedy batches (the common case) skip the sampling math
+        greedy = lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        self._greedy_fn = jax.jit(greedy)
+        self._sample_gather_fn = None
+        self._sample_notopk_gather_fn = None
+        self._greedy_gather_fn = None
+        if mesh is not None:
+            eng = self._engine
+
+            def _gathered(fn):
+                # per-shard tokens assembled by the engine's cached
+                # model-driven allgather
+                def local(lg, *rest):
+                    return eng.allgather_inside(fn(lg, *rest), dp_axis)
+                return local
+
+            row_specs = (P(dp_axis),) * 4
+            self._sample_gather_fn = jax.jit(shard_map(
+                _gathered(lambda lg, sid, tmp, tk:
+                          sample_tokens(lg, sid, tmp, key, tk)),
+                mesh=mesh, in_specs=row_specs, out_specs=P(),
+                check_rep=False))
+            self._sample_notopk_gather_fn = jax.jit(shard_map(
+                _gathered(lambda lg, sid, tmp:
+                          sample_tokens(lg, sid, tmp, key, 0)),
+                mesh=mesh, in_specs=row_specs[:3], out_specs=P(),
+                check_rep=False))
+            self._greedy_gather_fn = jax.jit(shard_map(
+                _gathered(greedy), mesh=mesh, in_specs=P(dp_axis),
+                out_specs=P(), check_rep=False))
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req, now=self.telemetry.now())
+        self.telemetry.record_submit()
+
+    def snapshot(self) -> TelemetrySnapshot:
+        return self.telemetry.snapshot(
+            queue_depth=len(self.scheduler.queue),
+            active=len(self.scheduler.active()),
+            allocator=self.allocator,
+            context_lens=self.scheduler.context_lens())
+
+    # ------------------------------------------------------------------ #
+    def _sample_rows(self, logits: jax.Array, reqs: List[Request],
+                     rows: List[int], gathered: bool) -> np.ndarray:
+        """logits [B, V] -> host tokens [B]; per-(request, position)
+        keys make the result independent of slot placement and DP."""
+        b = logits.shape[0]
+        sids = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        topks = np.zeros((b,), np.int32)
+        for row, req in zip(rows, reqs):
+            sids[row] = (req.rid * _SAMPLE_STRIDE
+                         + len(req.out)) % _SAMPLE_MOD
+            temps[row] = req.sampling.temperature
+            topks[row] = req.sampling.top_k or self.top_k
+        if not np.any(temps > 0):       # all-greedy hot path: argmax only
+            fn = self._greedy_gather_fn if gathered else self._greedy_fn
+            return np.asarray(fn(logits))
+        if not np.any(topks > 0):       # no cutoff sort needed
+            fn = (self._sample_notopk_gather_fn if gathered
+                  else self._sample_notopk_fn)
+            return np.asarray(fn(logits, jnp.asarray(sids),
+                                 jnp.asarray(temps)))
+        fn = self._sample_gather_fn if gathered else self._sample_fn
+        return np.asarray(fn(logits, jnp.asarray(sids), jnp.asarray(temps),
+                             jnp.asarray(topks)))
+
+    def _append_token(self, req: Request, token: int) -> None:
+        req.out.append(int(token))
+        self.telemetry.record_tokens(1)
+        if req.first_token_t is None:
+            req.first_token_t = self.telemetry.now()
+            self.telemetry.record_first_token(req.arrival_t)
+        if len(req.out) >= req.max_new_tokens:
+            req.done = True
+            req.finish_t = self.telemetry.now()
+            req.finish_step = self._step
+            self.telemetry.record_finish()
+
+    # ------------------------------------------------------------------ #
+    def _run_prefill_chunk(self, chunk: PrefillChunk) -> None:
+        req, start, n = chunk.req, chunk.start, chunk.length
+        replay = req.replay_tokens
+        tokens = np.zeros((1, self.prefill_chunk), np.int32)
+        tokens[0, :n] = replay[start:start + n]
+        bt = np.zeros((1, self.max_blocks_per_seq), np.int32)
+        bt[0, :len(req.table.blocks)] = req.table.blocks
+        ctx = np.asarray([req.ctx_len], np.int32)
+        new_len = np.asarray([n], np.int32)
+        if start == 0 and req.soft_emb is not None:
+            logits, self.pages = self._prefill_fn(
+                self.params, self.pages, tokens, bt, ctx, new_len,
+                req.soft_emb)
+            req.ctx_len += req.n_soft
+        else:
+            logits, self.pages = self._prefill_fn(
+                self.params, self.pages, tokens, bt, ctx, new_len)
+        req.prefilled += n
+        req.ctx_len += n
+        if req.prefilled == len(replay):
+            # prompt fully cached: the chunk's last valid position
+            # yields this request's next token (its first, unless it
+            # was preempted mid-decode and replayed)
+            req.state = RUNNING
+            tok = self._sample_rows(logits[:, n - 1], [req], [0],
+                                    gathered=False)
+            self._append_token(req, int(tok[0]))
+
+    def _run_decode(self) -> None:
+        running = self.scheduler.running()
+        rows = [i for i, _ in running]
+        reqs = [r for _, r in running]
+        tokens = np.zeros((self.batch, 1), np.int32)
+        bt = np.zeros((self.batch, self.max_blocks_per_seq), np.int32)
+        ctx = np.zeros((self.batch,), np.int32)
+        for i, req in running:
+            tokens[i, 0] = req.out[-1]
+            bt[i, :len(req.table.blocks)] = req.table.blocks
+            ctx[i] = req.ctx_len
+        args = [jnp.asarray(tokens), jnp.asarray(bt), jnp.asarray(ctx)]
+        if self.mesh is not None:
+            args = [jax.device_put(a, self._row_sharding) for a in args]
+        logits, self.pages = self._decode_fn(self.params, self.pages, *args)
+        toks = self._sample_rows(logits[:, 0], reqs, rows,
+                                 gathered=self.mesh is not None)
+        for i, req in running:
+            req.ctx_len += 1
+            self._append_token(req, int(toks[i]))
+
+    # ------------------------------------------------------------------ #
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Serve until queue + slots drain, or ``max_steps`` decode
+        iterations when given (default: drain -- total decode work is
+        bounded by the submitted max_new_tokens, and a stalled scheduler
+        raises).  Returns {rid: generated tokens} (partial outputs
+        included when a step budget ends first)."""
+        results: Dict[int, List[int]] = {}
+        decode_steps = 0
+        if max_steps is None:
+            max_steps = float("inf")
+        while self.scheduler.has_work():
+            for req in self.scheduler.retire_finished():
+                results[req.rid] = req.out
+            self.scheduler.admit(self._step)
+            if not self.scheduler.active():
+                if self.scheduler.queue:
+                    raise RuntimeError(
+                        "serving stalled: queued request cannot be "
+                        "admitted (KV block pool too small?)")
+                break       # drained
+            plan = self.scheduler.prefill_plan()
+            for chunk in plan:
+                self._run_prefill_chunk(chunk)
+            decoded = False
+            if self.scheduler.any_running():
+                for _ in self.scheduler.grow_for_decode():
+                    self.telemetry.record_preemption()
+                if self.scheduler.any_running():
+                    self._run_decode()
+                    decoded = True
+                    decode_steps += 1
+            self.telemetry.record_step(decoded=decoded,
+                                       prefill_chunks=len(plan),
+                                       kv_occupancy=self.allocator.occupancy)
+            self._step += 1
+            if decode_steps >= max_steps:
+                break
+            if not plan and not decoded and not any(
+                    r.done for r in self.scheduler.slots if r):
+                raise RuntimeError("scheduler made no progress")
+        for req in self.scheduler.retire_finished():
+            results[req.rid] = req.out
+        # step budget exhausted: report partial generations
+        for _, req in self.scheduler.active():
+            results.setdefault(req.rid, req.out)
+        for req in self.scheduler.queue:
+            results.setdefault(req.rid, req.out)
+        return results
+
+
+__all__ = ["ContinuousBatchingServer", "Request"]

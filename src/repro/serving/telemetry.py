@@ -1,0 +1,111 @@
+"""Serving telemetry: TTFT, throughput, queue depth, KV occupancy.
+
+The server records events as they happen; ``snapshot()`` freezes them
+into an immutable dataclass (the thing a metrics exporter would ship).
+Percentiles are computed at snapshot time from the raw TTFT samples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySnapshot:
+    """Point-in-time view of the serving loop."""
+    elapsed_s: float
+    steps: int                  # scheduler iterations
+    decode_steps: int
+    prefill_chunks: int
+    submitted: int
+    finished: int
+    preemptions: int
+    queue_depth: int
+    active: int
+    tokens_out: int
+    tok_per_s: float            # generated tokens / elapsed
+    ttft_p50_ms: Optional[float]
+    ttft_p99_ms: Optional[float]
+    kv_blocks_total: int
+    kv_blocks_used: int
+    kv_occupancy: float
+    kv_peak_occupancy: float
+    kv_internal_frag_slots: int
+
+
+class Telemetry:
+    """Mutable collector behind the snapshot."""
+
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self.t0 = clock()
+        self.steps = 0
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self.submitted = 0
+        self.finished = 0
+        self.preemptions = 0
+        self.tokens_out = 0
+        self.peak_kv_occupancy = 0.0
+        self.ttft_s: List[float] = []
+
+    def record_submit(self) -> None:
+        self.submitted += 1
+
+    def record_first_token(self, arrival_t: float) -> None:
+        self.ttft_s.append(self._clock() - arrival_t)
+
+    def record_tokens(self, n: int) -> None:
+        self.tokens_out += n
+
+    def record_finish(self) -> None:
+        self.finished += 1
+
+    def record_preemption(self) -> None:
+        self.preemptions += 1
+
+    def record_step(self, *, decoded: bool, prefill_chunks: int,
+                    kv_occupancy: float = 0.0) -> None:
+        self.steps += 1
+        self.decode_steps += int(decoded)
+        self.prefill_chunks += prefill_chunks
+        self.peak_kv_occupancy = max(self.peak_kv_occupancy, kv_occupancy)
+
+    def now(self) -> float:
+        return self._clock()
+
+    def snapshot(self, *, queue_depth: int, active: int, allocator,
+                 context_lens: List[int]) -> TelemetrySnapshot:
+        elapsed = max(self._clock() - self.t0, 1e-9)
+        ttft = np.asarray(self.ttft_s, np.float64)
+        return TelemetrySnapshot(
+            elapsed_s=elapsed,
+            steps=self.steps,
+            decode_steps=self.decode_steps,
+            prefill_chunks=self.prefill_chunks,
+            submitted=self.submitted,
+            finished=self.finished,
+            preemptions=self.preemptions,
+            queue_depth=queue_depth,
+            active=active,
+            tokens_out=self.tokens_out,
+            tok_per_s=self.tokens_out / elapsed,
+            ttft_p50_ms=(float(np.percentile(ttft, 50)) * 1e3
+                         if ttft.size else None),
+            ttft_p99_ms=(float(np.percentile(ttft, 99)) * 1e3
+                         if ttft.size else None),
+            kv_blocks_total=allocator.capacity,
+            kv_blocks_used=allocator.num_used,
+            kv_occupancy=allocator.occupancy,
+            kv_peak_occupancy=max(self.peak_kv_occupancy,
+                                  allocator.occupancy),
+            kv_internal_frag_slots=allocator.internal_fragmentation(
+                context_lens),
+        )
+
+
+__all__ = ["Telemetry", "TelemetrySnapshot"]

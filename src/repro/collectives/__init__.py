@@ -1,19 +1,27 @@
-from repro.collectives.api import (allgather, allgather_inside, allreduce,
-                                   allreduce_inside, broadcast,
+from repro.collectives.api import (allgather, allgather_inside,
+                                   allgather_multi_inside, allreduce,
+                                   allreduce_inside,
+                                   allreduce_multi_inside, broadcast,
                                    broadcast_inside, get_engine,
+                                   plan_collective,
                                    reduce_scatter, reduce_scatter_inside,
+                                   reduce_scatter_multi_inside,
                                    reduce_to_root, select_algorithm,
                                    set_engine)
 from repro.collectives.engine import (CollectiveEngine, Decision, fit_fabric,
                                       measure_ppermute)
 from repro.collectives.overlap import (bucket_algorithm_plan,
                                        bucketed_allreduce)
+from repro.collectives.planner import CollectivePlan, PlanStep
 from repro.collectives import shardmap_impl
 
-__all__ = ["allreduce", "allreduce_inside", "reduce_scatter",
-           "reduce_scatter_inside", "allgather", "allgather_inside",
+__all__ = ["allreduce", "allreduce_inside", "allreduce_multi_inside",
+           "reduce_scatter", "reduce_scatter_inside",
+           "reduce_scatter_multi_inside",
+           "allgather", "allgather_inside", "allgather_multi_inside",
            "broadcast", "broadcast_inside", "reduce_to_root",
            "select_algorithm", "get_engine", "set_engine",
+           "plan_collective", "CollectivePlan", "PlanStep",
            "CollectiveEngine", "Decision", "fit_fabric",
            "measure_ppermute", "bucket_algorithm_plan",
            "bucketed_allreduce", "shardmap_impl"]

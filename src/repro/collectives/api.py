@@ -71,6 +71,41 @@ def allreduce_inside(x: jax.Array, axis: str, algorithm: str = "auto",
     return get_engine(fabric).allreduce_inside(x, axis, algorithm)
 
 
+def allreduce_multi_inside(x: jax.Array, axes, algorithm: str = "auto",
+                           fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Joint multi-axis AllReduce (planner-driven) inside shard_map.
+
+    ``algorithm`` is ``"auto"`` or a plan shape: ``sequential`` /
+    ``hierarchical`` / ``2d_xy`` / ``2d_snake`` / ``flat`` (or a 1D
+    backend name, forcing the sequential shape with that backend)."""
+    return get_engine(fabric).allreduce_multi(x, axes, algorithm)
+
+
+def reduce_scatter_multi_inside(x: jax.Array, axes,
+                                algorithm: str = "auto",
+                                fabric: Fabric = TPU_V5E_AXIS
+                                ) -> jax.Array:
+    """Multi-axis reduce-scatter (``lax.psum_scatter(x, axes,
+    tiled=True)`` semantics) inside shard_map."""
+    return get_engine(fabric).reduce_scatter_multi(x, axes, algorithm)
+
+
+def allgather_multi_inside(x: jax.Array, axes, algorithm: str = "auto",
+                           fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Multi-axis allgather (``lax.all_gather(x, axes, tiled=True)``
+    semantics) inside shard_map."""
+    return get_engine(fabric).allgather_multi(x, axes, algorithm)
+
+
+def plan_collective(op: str, mesh: Mesh, axes, nbytes: int,
+                    fabric: Fabric = TPU_V5E_AXIS):
+    """The joint ``CollectivePlan`` the engine would execute for an op
+    over a mesh axis tuple at a given byte size (introspection)."""
+    axes = tuple(axes)
+    sizes = tuple(mesh.shape[a] for a in axes)
+    return get_engine(fabric).plan_multi(op, axes, sizes, nbytes)
+
+
 def reduce_scatter_inside(x: jax.Array, axis: str, algorithm: str = "auto",
                           fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
     return get_engine(fabric).reduce_scatter_inside(x, axis, algorithm)
@@ -123,7 +158,9 @@ def broadcast(x: jax.Array, mesh: Mesh, axis: str, root: int = 0,
 
 
 __all__ = ["get_engine", "set_engine", "select_algorithm",
-           "allreduce", "allreduce_inside",
+           "allreduce", "allreduce_inside", "allreduce_multi_inside",
            "reduce_scatter", "reduce_scatter_inside",
-           "allgather", "allgather_inside",
-           "broadcast", "broadcast_inside", "reduce_to_root"]
+           "reduce_scatter_multi_inside",
+           "allgather", "allgather_inside", "allgather_multi_inside",
+           "broadcast", "broadcast_inside", "reduce_to_root",
+           "plan_collective"]

@@ -50,6 +50,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core.autogen import autogen_tree, cache_dir, compute_tables
 from repro.core.model import Fabric, TPU_V5E_AXIS
 from repro.core import selector
+from repro.collectives import planner
 from repro.collectives import shardmap_impl as impl
 
 #: one model "element" on the TPU fabric (512-byte flit group)
@@ -59,7 +60,17 @@ ICI_ELEMENT_BYTES = 512
 #: decisions computed under the old model stop being served
 MODEL_VERSION = 1
 
+#: persisted-file layout version.  v2 keys decisions by the full
+#: topology signature (``op|t=2x8|B=...``) instead of the bare axis size
+#: (``op|p=16|B=...``) and adds the ``plans`` section; v1 files are
+#: migrated on load (their keys are 1D signatures by construction).
+SCHEMA_VERSION = 2
+
 Rounds = Tuple[Tuple[Tuple[int, int], ...], ...]
+
+
+def _topo_key(op: str, topo: Sequence[int], nbytes: int) -> str:
+    return f"{op}|t={'x'.join(str(int(s)) for s in topo)}|B={nbytes}"
 
 
 def _freeze_rounds(rounds: Sequence[Sequence[Tuple[int, int]]]) -> Rounds:
@@ -147,6 +158,7 @@ class CollectiveEngine:
         self._persist = persist
         self._cache_path_override = cache_path
         self._decisions: Dict[str, Decision] = {}
+        self._plans: Dict[str, Dict[str, Any]] = {}
         self._tree_rounds: Dict[Tuple[int, int], Rounds] = {}
         self._tables: Dict[int, Any] = {}
         self._loaded = False
@@ -154,7 +166,8 @@ class CollectiveEngine:
         self._dirty = False
         self._last_save = 0.0
         self.stats = {"hits": 0, "misses": 0, "dp_runs": 0,
-                      "persisted_loads": 0}
+                      "persisted_loads": 0, "plan_hits": 0,
+                      "plan_misses": 0}
         if persist:
             atexit.register(self.flush)
 
@@ -194,7 +207,12 @@ class CollectiveEngine:
         # calibrate() swaps the fabric)
         if payload.get("fabric") != self._fabric_tag():
             return
+        schema = int(payload.get("schema", 1))
         for key, d in payload.get("decisions", {}).items():
+            if schema < 2:
+                # v1 keys are "op|p=8|B=..."; every v1 entry is a bare
+                # 1D axis, so its topology signature is just (p,)
+                key = key.replace("|p=", "|t=", 1)
             rounds = (_freeze_rounds(d["rounds"])
                       if d.get("rounds") else None)
             self._decisions[key] = Decision(
@@ -203,6 +221,9 @@ class CollectiveEngine:
                 predictions={k: float(v)
                              for k, v in d["predictions"].items()},
                 rounds=rounds)
+            self.stats["persisted_loads"] += 1
+        for key, rec in payload.get("plans", {}).items():
+            self._plans[key] = rec
             self.stats["persisted_loads"] += 1
 
     def _maybe_save(self) -> None:
@@ -234,8 +255,9 @@ class CollectiveEngine:
             os.makedirs(os.path.dirname(path), exist_ok=True)
             tmp = path + f".tmp{os.getpid()}"
             with open(tmp, "w") as f:
-                json.dump({"fabric": self._fabric_tag(), "decisions": raw},
-                          f)
+                json.dump({"schema": SCHEMA_VERSION,
+                           "fabric": self._fabric_tag(),
+                           "decisions": raw, "plans": self._plans}, f)
             os.replace(tmp, path)
         except OSError:
             # unwritable/bogus cache dir: selection still works, it just
@@ -264,8 +286,16 @@ class CollectiveEngine:
                 self._tree_rounds[key] = rounds
             return rounds
 
-    def select(self, op: str, nbytes: int, p: int) -> Decision:
-        """Model-driven selection, memoized by (op, P, bytes, fabric).
+    def select(self, op: str, nbytes: int, p: int,
+               topo: Optional[Tuple[int, ...]] = None) -> Decision:
+        """Model-driven selection, memoized by the full topology
+        signature ``(op, axis_sizes, bytes, fabric)``.
+
+        For a bare 1D axis the signature is ``(p,)``; a folded logical
+        axis passes its shape as ``topo`` (e.g. ``(2, 8)``) so a 16-way
+        ``data`` axis and a 16-way folded ``(pod, data)`` topology never
+        share cache entries even though their modeled costs coincide
+        today -- calibration may split them later.
 
         ``allreduce`` keeps the paper-selector candidate set (fixed
         patterns + ring); the other ops additionally model their
@@ -276,7 +306,7 @@ class CollectiveEngine:
             return Decision(op, p, nbytes, "identity", 0.0, {})
         with self._lock:
             self._load_persisted()
-            key = f"{op}|p={p}|B={nbytes}"
+            key = _topo_key(op, topo or (p,), nbytes)
             hit = self._decisions.get(key)
             if hit is not None:
                 self.stats["hits"] += 1
@@ -306,9 +336,42 @@ class CollectiveEngine:
             self._maybe_save()
             return decision
 
+    def plan_multi(self, op: str, axes: Sequence[str],
+                   sizes: Sequence[int], nbytes: int,
+                   shape: Optional[str] = None) -> planner.CollectivePlan:
+        """Topology-aware joint plan for an axis tuple, memoized and
+        persisted by ``(op, axis_sizes, bytes, fabric)``.
+
+        ``shape`` forces a candidate ("hierarchical", "2d_xy", ...)
+        instead of taking the model argmin; forced plans are derived
+        from the same scored record, so they are cached once too.
+        """
+        axes = tuple(axes)
+        sizes = tuple(int(s) for s in sizes)
+        if len(axes) != len(sizes):
+            raise ValueError(f"axes {axes} vs sizes {sizes}")
+        with self._lock:
+            self._load_persisted()
+            key = _topo_key(op, sizes, nbytes)
+            if shape is not None:
+                key += f"|shape={shape}"
+            rec = self._plans.get(key)
+            if rec is None:
+                self.stats["plan_misses"] += 1
+                rec = planner.plan_collective(
+                    op, sizes, nbytes, self.fabric, self.element_bytes,
+                    self.select, force_shape=shape)
+                self._plans[key] = rec
+                self._dirty = True
+                self._maybe_save()
+            else:
+                self.stats["plan_hits"] += 1
+        return planner.bind_plan(rec, op, axes)
+
     def clear_cache(self) -> None:
         with self._lock:
             self._decisions.clear()
+            self._plans.clear()
             self._tree_rounds.clear()
             self._tables.clear()
             self._loaded = False
@@ -341,8 +404,9 @@ class CollectiveEngine:
             self.fabric = fit_fabric(measurements, base=self.fabric,
                                      element_bytes=self.element_bytes)
             # fabric changed => cache namespace (file name) changed too;
-            # in-memory decisions predate the new constants
+            # in-memory decisions and plans predate the new constants
             self._decisions.clear()
+            self._plans.clear()
             self._tree_rounds.clear()
             self._loaded = False
         return self.fabric
@@ -470,6 +534,155 @@ class CollectiveEngine:
                                jnp.zeros_like(x))
             return impl.schedule_broadcast(seeded, axis, rounds)
         raise ValueError(f"unknown broadcast algorithm {algorithm!r}")
+
+    # ------------------------------------------------------------------ #
+    # multi-axis dispatch: planner-driven joint plans over axis tuples
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _multi_sizes(axes: Sequence[str]) -> Tuple[int, ...]:
+        return tuple(impl._axis_size(a) for a in axes)
+
+    @staticmethod
+    def _chunk_transpose(x: jax.Array, sizes: Sequence[int]) -> jax.Array:
+        """Reorder leading-dim chunks from row-major blocks over
+        ``sizes`` to row-major blocks over ``reversed(sizes)`` -- the
+        permutation that makes the innermost-first reduce-scatter
+        cascade land chunks in ``lax.psum_scatter`` (device-major)
+        order."""
+        k = len(sizes)
+        blocks = x.reshape(tuple(sizes) + (-1,) + x.shape[1:])
+        perm = tuple(reversed(range(k))) + tuple(range(k, blocks.ndim))
+        return blocks.transpose(perm).reshape(x.shape)
+
+    def allreduce_multi(self, x: jax.Array, axes: Sequence[str],
+                        algorithm: str = "auto") -> jax.Array:
+        """AllReduce over an axis tuple through a joint topology plan.
+
+        ``algorithm`` is either ``"auto"`` (planner argmin), a plan
+        shape (``"sequential" | "hierarchical" | "2d_xy" | "2d_snake" |
+        "flat"``), ``"psum"`` (XLA native over the folded axes), or a
+        1D backend name, which forces the sequential shape with that
+        backend on every axis (the legacy per-axis loop).
+        """
+        axes = tuple(axes)
+        if len(axes) == 1:
+            return self.allreduce_inside(x, axes[0], algorithm)
+        if algorithm == "psum":
+            return lax.psum(x, axes)
+        sizes = self._multi_sizes(axes)
+        if all(s == 1 for s in sizes):
+            return x
+        nbytes = x.size * x.dtype.itemsize
+        if algorithm == "auto" or algorithm in planner.ALLREDUCE_SHAPES:
+            shape = None if algorithm == "auto" else algorithm
+            plan = self.plan_multi("allreduce", axes, sizes, nbytes,
+                                   shape=shape)
+            return self._run_allreduce_plan(x, plan)
+        # legacy: explicit 1D backend, innermost axis first
+        for ax in reversed(axes):
+            x = self.allreduce_inside(x, ax, algorithm)
+        return x
+
+    def _run_allreduce_plan(self, x: jax.Array,
+                            plan: "planner.CollectivePlan") -> jax.Array:
+        if plan.shape == "identity":
+            return x
+        if plan.shape == "2d_xy":
+            (step,) = plan.steps
+            patterns = tuple(step.algorithm.split("x"))
+            return impl.xy_allreduce_2d(x, step.axes, patterns)
+        if plan.shape == "2d_snake":
+            (step,) = plan.steps
+            return impl.snake_allreduce_2d(x, step.axes)
+        if plan.shape == "flat":
+            (step,) = plan.steps
+            return self.allreduce_inside(x, step.axes, step.algorithm)
+        if plan.shape == "sequential":
+            for step in plan.steps:
+                x = self.allreduce_inside(x, step.axes[0], step.algorithm)
+            return x
+        if plan.shape == "hierarchical":
+            rs, mid, ag = plan.steps
+            inner = rs.axes[0]
+            p_in = impl._axis_size(inner)
+            shape0 = x.shape
+            flat = x.reshape(-1)
+            pad = (-flat.size) % p_in
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            shard = self.reduce_scatter_inside(flat, inner,
+                                               algorithm=rs.algorithm)
+            shard = self.allreduce_multi(shard, mid.axes,
+                                         algorithm=mid.algorithm)
+            full = self.allgather_inside(shard, inner,
+                                         algorithm=ag.algorithm)
+            if pad:
+                full = full[:-pad]
+            return full.reshape(shape0)
+        raise ValueError(f"unknown plan shape {plan.shape!r}")
+
+    def reduce_scatter_multi(self, x: jax.Array, axes: Sequence[str],
+                             algorithm: str = "auto") -> jax.Array:
+        """Sum over the folded axes, shard the result device-major
+        (``lax.psum_scatter(x, axes, tiled=True)`` semantics; leading
+        dim divisible by the folded size)."""
+        axes = tuple(axes)
+        if len(axes) == 1:
+            return self.reduce_scatter_inside(x, axes[0], algorithm)
+        if algorithm == "psum_scatter":
+            return lax.psum_scatter(x, axes, scatter_dimension=0,
+                                    tiled=True)
+        sizes = self._multi_sizes(axes)
+        p = 1
+        for s in sizes:
+            p *= s
+        if p == 1:
+            return x
+        assert x.shape[0] % p == 0, (x.shape, p)
+        nbytes = x.size * x.dtype.itemsize
+        shape = None if algorithm == "auto" else algorithm
+        plan = self.plan_multi("reduce_scatter", axes, sizes, nbytes,
+                               shape=shape)
+        if plan.shape == "flat":
+            (step,) = plan.steps
+            return self.reduce_scatter_inside(x, step.axes,
+                                              step.algorithm)
+        # cascade: pre-permute chunks so the innermost-first shrink
+        # lands each device on its psum_scatter chunk
+        x = self._chunk_transpose(x, sizes)
+        for step in plan.steps:
+            x = self.reduce_scatter_inside(x, step.axes[0],
+                                           step.algorithm)
+        return x
+
+    def allgather_multi(self, x: jax.Array, axes: Sequence[str],
+                        algorithm: str = "auto") -> jax.Array:
+        """Gather device-major shards along the folded axes into the
+        leading dim (``lax.all_gather(x, axes, tiled=True)``
+        semantics)."""
+        axes = tuple(axes)
+        if len(axes) == 1:
+            return self.allgather_inside(x, axes[0], algorithm)
+        if algorithm == "all_gather":
+            return lax.all_gather(x, axes, tiled=True)
+        sizes = self._multi_sizes(axes)
+        p = 1
+        for s in sizes:
+            p *= s
+        if p == 1:
+            return x
+        nbytes = x.size * x.dtype.itemsize * p
+        shape = None if algorithm == "auto" else algorithm
+        plan = self.plan_multi("allgather", axes, sizes, nbytes,
+                               shape=shape)
+        if plan.shape == "flat":
+            (step,) = plan.steps
+            return self.allgather_inside(x, step.axes, step.algorithm)
+        # cascade: outermost-first growth, then undo the chunk
+        # permutation the matching reduce-scatter cascade applied
+        for step in plan.steps:
+            x = self.allgather_inside(x, step.axes[0], step.algorithm)
+        return self._chunk_transpose(x, tuple(reversed(sizes)))
 
     # ------------------------------------------------------------------ #
     # outer wrappers: build the shard_map for replicated operands

@@ -13,9 +13,12 @@ the data/pod axes):
   remaining backward compute (on TPU the collectives are async).
 * **Compression**: optional bf16 reduction with fp32 error feedback
   (residual carried between steps), halving the collective term.
-* **Two-phase hierarchy**: on the multi-pod mesh the reduction runs the
-  paper's Two-Phase structure natively -- intra-pod phase over 'data',
-  inter-pod phase over 'pod'.
+* **Topology-aware multi-axis plans**: on the multi-pod mesh each
+  bucket flows through ``engine.allreduce_multi``, so the planner
+  jointly scores the paper's 2D patterns (xy/snake over the folded
+  grid), the hierarchical RS -> AR -> AG composition (cross-pod phase
+  on 1/P of the bytes), the flat folded ring, and the legacy
+  per-axis sequential loop -- and runs the winner.
 """
 
 from __future__ import annotations
@@ -61,6 +64,17 @@ def _unflatten(buckets: List[jax.Array], meta) -> Any:
     return jax.tree.unflatten(treedef, leaves)
 
 
+def flatten_tree(tree) -> Tuple[jax.Array, Any]:
+    """Flatten a pytree to one fp32 vector + the meta ``unflatten_tree``
+    needs to restore shapes/dtypes (the FSDP flat-shard layout)."""
+    buckets, meta = _flatten_to_buckets(tree, bucket_bytes=1 << 62)
+    return buckets[0], meta
+
+
+def unflatten_tree(flat: jax.Array, meta) -> Any:
+    return _unflatten([flat], meta)
+
+
 def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
                        algorithm: str = "auto",
                        bucket_bytes: int = DEFAULT_BUCKET_BYTES,
@@ -70,9 +84,12 @@ def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
                        engine: Optional[CollectiveEngine] = None):
     """AllReduce a gradient pytree over DP axes.
 
-    Multi-axis (('pod','data')) runs hierarchically: reduce over 'data'
-    within each pod, then over 'pod' -- the Two-Phase pattern at pod
-    granularity.  Returns (reduced_grads, new_error_feedback).
+    Multi-axis (('pod','data')) buckets run the planner's joint
+    topology plan (``engine.allreduce_multi``): hierarchical
+    RS -> AR -> AG, the paper's 2D xy/snake patterns, the flat folded
+    ring, or the sequential per-axis loop -- whichever Eq. (1) prices
+    cheapest for the bucket size, per bucket.  Returns
+    (reduced_grads, new_error_feedback).
 
     All collective traffic flows through the CollectiveEngine, so the
     per-bucket `auto` selection is cached across steps (one model sweep
@@ -89,8 +106,7 @@ def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
         v = b
         if compress:
             v = v.astype(jnp.bfloat16)
-        for ax in reversed(axes):        # intra-pod first, then cross-pod
-            v = engine.allreduce_inside(v, ax, algorithm=algorithm)
+        v = engine.allreduce_multi(v, axes, algorithm=algorithm)
         return v.astype(jnp.float32)
 
     spec = P()
@@ -118,24 +134,39 @@ def bucketed_allreduce(grads, mesh: Mesh, axes: Tuple[str, ...] = ("data",),
     return out, new_ef
 
 
-def bucket_algorithm_plan(grads, mesh: Mesh, axis: str = "data",
+def bucket_algorithm_plan(grads, mesh: Mesh,
+                          axes: Tuple[str, ...] = ("data",),
                           bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                           engine: Optional[CollectiveEngine] = None
                           ) -> List[Tuple[int, str]]:
-    """What the selector would pick per bucket (introspection/reporting)."""
+    """What the planner would run per bucket (introspection/reporting).
+
+    Takes the same axis tuple ``bucketed_allreduce`` executes with.  A
+    single axis reports the 1D selector's algorithm; a multi-axis
+    topology reports the joint plan shape, e.g.
+    ``hierarchical(rs:ring->ar:ring->ag:doubling)``.
+    """
     if engine is None:
         engine = get_engine()
+    if isinstance(axes, str):       # tolerate the old single-axis form
+        axes = (axes,)
+    axes = tuple(axes)
+    sizes = tuple(mesh.shape[a] for a in axes)
     leaves = jax.tree.leaves(grads)
     total = sum(l.size * 4 for l in leaves)
-    p = mesh.shape[axis]
     plan = []
     off = 0
     while off < total:
         b = min(bucket_bytes, total - off)
-        plan.append((b, engine.select("allreduce", b, p).algorithm))
+        if len(axes) == 1:
+            plan.append((b, engine.select("allreduce", b,
+                                          sizes[0]).algorithm))
+        else:
+            plan.append((b, engine.plan_multi("allreduce", axes, sizes,
+                                              b).describe()))
         off += b
     return plan
 
 
 __all__ = ["bucketed_allreduce", "bucket_algorithm_plan",
-           "DEFAULT_BUCKET_BYTES"]
+           "flatten_tree", "unflatten_tree", "DEFAULT_BUCKET_BYTES"]

@@ -1,0 +1,432 @@
+"""Topology-aware collective planner: joint multi-axis plans.
+
+The model layer already prices the paper's 2D results (xy-reduce,
+snake-reduce, the 2D lower bound -- ``core/patterns.py`` Sec. 7) but the
+runtime used to dispatch one axis at a time.  This module closes that
+gap: ``plan_collective`` takes an *axis-size tuple* (the folded m x n
+topology, e.g. ``("pod", "data") -> (2, 16)``) and jointly scores every
+implemented multi-axis composition under Eq. (1):
+
+* ``sequential``   -- per-axis AllReduce, innermost axis first (the old
+  ``overlap.bucketed_allreduce`` loop).  Moves the full vector across
+  every axis.
+* ``hierarchical`` -- reduce-scatter(inner) -> allreduce(outer, on 1/P
+  of the bytes) -> allgather(inner).  Bandwidth-optimal composition:
+  the expensive outer (cross-pod) phase only ever sees ``B / P_inner``
+  bytes.
+* ``2d_xy``        -- the paper's X-Y Reduce over the folded m x n grid
+  (best 1D pattern per dimension) plus a 2D broadcast (flooding where
+  the fabric multicasts, per-axis doubling on ICI).
+* ``2d_snake``     -- Snake Reduce: one pipelined chain over the
+  boustrophedon order of the grid, plus the same 2D broadcast.
+* ``flat``         -- the best 1D algorithm over the axes folded into a
+  single logical axis (row-major), the ``psum((a, b))`` shape.
+
+Per-axis candidates inside each shape are priced through the engine's
+``select`` (so their decisions share the persistent cache), the joint
+winner is validated against the paper's 2D lower bound
+(``t_lower_bound_2d``, Lemma 7.2), and the result is a
+``CollectivePlan`` whose ``cost_terms`` expose the modeled per-axis
+wire bytes -- the quantity that makes "hierarchical moves strictly
+fewer cross-pod bytes" an assertable fact rather than folklore.
+
+``reduce_scatter`` / ``allgather`` plans use the ``cascade`` shape
+(per-axis halves, chunk-transposed so the output layout matches
+``lax.psum_scatter(..., tiled=True)`` over the folded axes) and the
+``flat`` shape; their lower bound instantiates Lemma 7.2 at the
+``B * (P-1)/P`` bytes every device must minimally move.
+
+Plans are positional (axis *sizes*, not names) so the engine can cache
+them under the topology signature ``(op, axis_sizes, bytes, fabric)``
+and rebind mesh axis names on retrieval.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import patterns as pat
+from repro.core.model import Fabric, ceil_div
+from repro.core.selector import t_broadcast_2d_fabric
+
+#: shapes a multi-axis allreduce plan may take
+ALLREDUCE_SHAPES = ("sequential", "hierarchical", "2d_xy", "2d_snake",
+                    "flat")
+#: shapes a multi-axis reduce_scatter / allgather plan may take
+SHARDED_SHAPES = ("cascade", "flat")
+
+#: the engine's select() viewed from the planner: (op, nbytes, p, topo)
+SelectFn = Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    """One executable phase of a plan.
+
+    ``axes`` holds *indices* into the plan's axis tuple in positional
+    (unbound) records and axis *names* once the engine binds a mesh.
+    ``nbytes`` is the vector size entering the phase (the size its
+    algorithm was priced at).
+    """
+
+    kind: str                   # reduce_scatter | allreduce | allgather
+                                # | xy_allreduce | snake_allreduce
+    axes: Tuple[Any, ...]
+    algorithm: str
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePlan:
+    """A scored, executable multi-axis collective plan.
+
+    ``predictions`` maps every candidate shape to its Eq.-(1) estimate;
+    ``cost_terms`` maps every candidate shape to
+    ``{"predicted": cycles, "axis_bytes": {axis: modeled wire bytes}}``
+    where ``axis_bytes[ax]`` sums, over the shape's phases on that axis,
+    ``phase_bytes * (p - 1) / p`` (doubled for allreduce phases, which
+    run both a reduce-scatter-like and an allgather-like half).
+    ``lower_bound`` is the 2D bound the chosen plan was validated
+    against.
+    """
+
+    op: str
+    axes: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+    nbytes: int
+    shape: str
+    steps: Tuple[PlanStep, ...]
+    predicted: float
+    predictions: Dict[str, float]
+    cost_terms: Dict[str, Dict[str, Any]]
+    lower_bound: float
+
+    def describe(self) -> str:
+        """Compact human-readable plan shape, e.g.
+        ``hierarchical(rs:ring->ar:ring->ag:ring)``."""
+        if not self.steps:
+            return "identity"
+        inner = "->".join(
+            f"{_KIND_ABBREV.get(s.kind, s.kind)}:{s.algorithm}"
+            for s in self.steps)
+        return f"{self.shape}({inner})"
+
+
+_KIND_ABBREV = {"reduce_scatter": "rs", "allreduce": "ar",
+                "allgather": "ag", "xy_allreduce": "xy",
+                "snake_allreduce": "snake"}
+
+
+def _elements(nbytes: int, element_bytes: int) -> int:
+    return max(1, nbytes // element_bytes)
+
+
+def _effective(sizes: Sequence[int]) -> List[Tuple[int, int]]:
+    """(axis index, size) for axes that actually move data."""
+    return [(i, p) for i, p in enumerate(sizes) if p > 1]
+
+
+def _fold_2d(sizes: Sequence[int]) -> Tuple[int, int]:
+    """Fold an axis-size tuple into the m x n grid the 2D lemmas use:
+    outer axes collapse into m, the innermost effective axis is n."""
+    eff = _effective(sizes)
+    if not eff:
+        return (1, 1)
+    if len(eff) == 1:
+        return (1, eff[0][1])
+    n = eff[-1][1]
+    m = 1
+    for _, p in eff[:-1]:
+        m *= p
+    return (m, n)
+
+
+def lower_bound_multi(op: str, sizes: Sequence[int], nbytes: int,
+                      fabric: Fabric, element_bytes: int) -> float:
+    """Lemma 7.2 instantiated for the folded topology and the op's
+    minimal per-device volume.
+
+    AllReduce carries the full lemma: the root must absorb the whole
+    B-vector after it crossed the grid, so both the volume and the
+    ``M + N - 1`` traversal branches bind.  A reduce-scatter /
+    allgather only guarantees that every device moves ``B * (P-1)/P``
+    elements with no reduce-to-root path, so the bound degenerates to
+    the volume branch -- ``t_lower_bound_2d`` on a 1 x 1 grid at that
+    volume."""
+    m, n = _fold_2d(sizes)
+    if m * n <= 1:
+        return 0.0
+    b = _elements(nbytes, element_bytes)
+    if op in ("reduce_scatter", "allgather"):
+        p = m * n
+        b = max(1, math.ceil(b * (p - 1) / p))
+        return pat.t_lower_bound_2d(1, 1, b, fabric)
+    return pat.t_lower_bound_2d(m, n, b, fabric)
+
+
+def _best_reduce_pattern(p: int, b: int, fabric: Fabric
+                         ) -> Tuple[str, float]:
+    preds = {name: fn(p, b, fabric)
+             for name, fn in pat.REDUCE_PATTERNS.items()
+             if name != "tree" or (p & (p - 1)) == 0}
+    name = min(preds, key=preds.get)
+    return name, preds[name]
+
+
+def _wire_bytes(nbytes: float, p: int, allreduce: bool = False) -> float:
+    """Modeled per-device wire bytes of one phase over a P-way axis."""
+    if p <= 1:
+        return 0.0
+    return (2.0 if allreduce else 1.0) * nbytes * (p - 1) / p
+
+
+def _merge_bytes(into: Dict[int, float], frm: Dict[int, float]) -> None:
+    for k, v in frm.items():
+        into[k] = into.get(k, 0.0) + v
+
+
+# ---------------------------------------------------------------------- #
+# shape scoring
+# ---------------------------------------------------------------------- #
+def _score_sequential(op_steps_kind: str, sizes: Sequence[int],
+                      nbytes: int, select: SelectFn
+                      ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+    """Per-axis allreduce, innermost first (the legacy loop)."""
+    t = 0.0
+    steps: List[PlanStep] = []
+    axis_bytes: Dict[int, float] = {}
+    for i in reversed(range(len(sizes))):
+        p = sizes[i]
+        if p <= 1:
+            continue
+        d = select("allreduce", nbytes, p)
+        t += d.predicted
+        steps.append(PlanStep("allreduce", (i,), d.algorithm, nbytes))
+        axis_bytes[i] = _wire_bytes(nbytes, p, allreduce=True)
+    return t, steps, axis_bytes
+
+
+def _score_cascade(op: str, sizes: Sequence[int], nbytes: int,
+                   select: SelectFn
+                   ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+    """Per-axis reduce_scatter (innermost first) or allgather (outermost
+    first); each phase shrinks/grows the live vector by its axis size."""
+    t = 0.0
+    steps: List[PlanStep] = []
+    axis_bytes: Dict[int, float] = {}
+    eff = _effective(sizes)
+    order = list(reversed(eff)) if op == "reduce_scatter" else list(eff)
+    if op == "allgather":
+        # allgather phases grow from the shard: replay the shrink to
+        # find per-phase entry sizes, then price in gather order
+        cur = nbytes
+        entry = {}
+        for i, p in reversed(eff):
+            entry[i] = cur
+            cur = ceil_div(cur, p)
+    for i, p in order:
+        if op == "reduce_scatter":
+            phase_bytes = nbytes
+            nbytes = ceil_div(nbytes, p)
+        else:
+            phase_bytes = entry[i]
+        d = select(op, phase_bytes, p)
+        t += d.predicted
+        steps.append(PlanStep(op, (i,), d.algorithm, phase_bytes))
+        axis_bytes[i] = _wire_bytes(phase_bytes, p)
+    return t, steps, axis_bytes
+
+
+def _score_flat(op: str, sizes: Sequence[int], nbytes: int,
+                select: SelectFn
+                ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+    """Best 1D algorithm over the row-major-folded logical axis.  The
+    decision is cached under the full topology signature, not the folded
+    P, so a 16-way axis and a folded 2x8 never share entries."""
+    p = 1
+    for s in sizes:
+        p *= s
+    d = select(op, nbytes, p, topo=tuple(sizes))
+    kind = op if op != "allreduce" else "allreduce"
+    steps = [PlanStep(kind, tuple(range(len(sizes))), d.algorithm, nbytes)]
+    # conservative attribution: the folded schedule may route any hop
+    # over any axis, so every axis is charged the full folded traffic
+    axis_bytes = {i: _wire_bytes(nbytes, p, allreduce=op == "allreduce")
+                  for i, s in enumerate(sizes) if s > 1}
+    return d.predicted, steps, axis_bytes
+
+
+def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
+                    element_bytes: int, select: SelectFn,
+                    force_shape: Optional[str] = None) -> Dict[str, Any]:
+    b = _elements(nbytes, element_bytes)
+    eff = _effective(sizes)
+    shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
+
+    t, steps, ab = _score_sequential("allreduce", sizes, nbytes, select)
+    shapes["sequential"] = (t, steps, ab)
+
+    if len(eff) >= 2:
+        shapes["flat"] = _score_flat("allreduce", sizes, nbytes, select)
+
+        # hierarchical: RS(inner) -> AR(outer, 1/P_inner bytes) -> AG(inner)
+        inner_i, inner_p = eff[-1]
+        rs = select("reduce_scatter", nbytes, inner_p)
+        ag = select("allgather", nbytes, inner_p)
+        shard_nbytes = ceil_div(nbytes, inner_p)
+        outer = [(i, p) for i, p in eff[:-1]]
+        h_steps = [PlanStep("reduce_scatter", (inner_i,), rs.algorithm,
+                            nbytes)]
+        h_bytes: Dict[int, float] = {
+            inner_i: _wire_bytes(nbytes, inner_p) * 2.0}
+        if len(outer) == 1:
+            oi, op_ = outer[0]
+            ar = select("allreduce", shard_nbytes, op_)
+            h_steps.append(PlanStep("allreduce", (oi,), ar.algorithm,
+                                    shard_nbytes))
+            t_mid = ar.predicted
+            h_bytes[oi] = _wire_bytes(shard_nbytes, op_, allreduce=True)
+        else:
+            sub_sizes = tuple(sizes[i] if (i, sizes[i]) in outer else 1
+                              for i in range(len(sizes)))
+            sub = _plan_allreduce(sub_sizes, shard_nbytes, fabric,
+                                  element_bytes, select)
+            h_steps.append(PlanStep("allreduce",
+                                    tuple(i for i, _ in outer),
+                                    sub["shape"], shard_nbytes))
+            t_mid = sub["predicted"]
+            _merge_bytes(h_bytes,
+                         {int(k): v for k, v in
+                          sub["cost_terms"][sub["shape"]]
+                          ["axis_bytes"].items()})
+        h_steps.append(PlanStep("allgather", (inner_i,), ag.algorithm,
+                                nbytes))
+        shapes["hierarchical"] = (rs.predicted + t_mid + ag.predicted,
+                                  h_steps, h_bytes)
+
+    if len(eff) == 2:
+        (mi, m), (ni, n) = eff
+        bc = t_broadcast_2d_fabric(m, n, b, fabric)
+        pm, tm = _best_reduce_pattern(m, b, fabric)
+        pn, tn = _best_reduce_pattern(n, b, fabric)
+        xy_bytes = {mi: _wire_bytes(nbytes, m) * 2.0,
+                    ni: _wire_bytes(nbytes, n) * 2.0}
+        shapes["2d_xy"] = (
+            tm + tn + bc,
+            [PlanStep("xy_allreduce", (mi, ni), f"{pm}x{pn}", nbytes)],
+            xy_bytes)
+        snake_bytes = {mi: _wire_bytes(nbytes, m) * 2.0,
+                       ni: _wire_bytes(nbytes, n) * 2.0}
+        shapes["2d_snake"] = (
+            pat.t_snake_reduce(m, n, b, fabric) + bc,
+            [PlanStep("snake_allreduce", (mi, ni), "snake", nbytes)],
+            snake_bytes)
+
+    return _finish("allreduce", sizes, nbytes, fabric, element_bytes,
+                   shapes, force_shape)
+
+
+def _plan_sharded(op: str, sizes: Tuple[int, ...], nbytes: int,
+                  fabric: Fabric, element_bytes: int, select: SelectFn,
+                  force_shape: Optional[str] = None) -> Dict[str, Any]:
+    eff = _effective(sizes)
+    shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
+    shapes["cascade"] = _score_cascade(op, sizes, nbytes, select)
+    if len(eff) >= 2:
+        shapes["flat"] = _score_flat(op, sizes, nbytes, select)
+    return _finish(op, sizes, nbytes, fabric, element_bytes, shapes,
+                   force_shape)
+
+
+def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
+            element_bytes: int,
+            shapes: Dict[str, Tuple[float, List[PlanStep],
+                                    Dict[int, float]]],
+            force_shape: Optional[str] = None) -> Dict[str, Any]:
+    if not any(p > 1 for p in sizes):
+        return {"op": op, "sizes": list(sizes), "nbytes": nbytes,
+                "shape": "identity", "steps": [], "predicted": 0.0,
+                "predictions": {}, "cost_terms": {}, "lower_bound": 0.0}
+    lb = lower_bound_multi(op, sizes, nbytes, fabric, element_bytes)
+    predictions = {name: t for name, (t, _, _) in shapes.items()}
+    for name, t in predictions.items():
+        if t < lb - 1e-6:
+            raise RuntimeError(
+                f"model inconsistency: {op} shape {name!r} predicts "
+                f"{t:.3f} cycles, below the 2D lower bound {lb:.3f} "
+                f"for topology {tuple(sizes)} at {nbytes} bytes")
+    if force_shape is not None:
+        if force_shape not in shapes:
+            raise ValueError(
+                f"shape {force_shape!r} is not a candidate for {op} "
+                f"over {tuple(sizes)}; have {sorted(shapes)}")
+        best = force_shape
+    else:
+        best = min(predictions, key=predictions.get)
+    t_best, steps, _ = shapes[best]
+    cost_terms = {
+        name: {"predicted": t,
+               "axis_bytes": {str(i): v for i, v in ab.items()}}
+        for name, (t, _, ab) in shapes.items()}
+    return {"op": op, "sizes": list(sizes), "nbytes": nbytes,
+            "shape": best,
+            "steps": [{"kind": s.kind, "axes": list(s.axes),
+                       "algorithm": s.algorithm, "nbytes": s.nbytes}
+                      for s in steps],
+            "predicted": t_best, "predictions": predictions,
+            "cost_terms": cost_terms, "lower_bound": lb}
+
+
+# ---------------------------------------------------------------------- #
+# public entry points
+# ---------------------------------------------------------------------- #
+def plan_collective(op: str, sizes: Sequence[int], nbytes: int,
+                    fabric: Fabric, element_bytes: int,
+                    select: SelectFn,
+                    force_shape: Optional[str] = None) -> Dict[str, Any]:
+    """Produce the positional (unbound) plan record for a topology.
+
+    ``select(op, nbytes, p, topo=None)`` prices one per-axis candidate;
+    the engine passes its cached ``Decision``-returning ``select`` so
+    every per-axis sub-decision lands in the persistent cache.
+    ``force_shape`` overrides the argmin with a named candidate (still
+    scored and lower-bound-validated alongside the others).
+    """
+    sizes = tuple(int(s) for s in sizes)
+    if op == "allreduce":
+        return _plan_allreduce(sizes, nbytes, fabric, element_bytes,
+                               select, force_shape)
+    if op in ("reduce_scatter", "allgather"):
+        return _plan_sharded(op, sizes, nbytes, fabric, element_bytes,
+                             select, force_shape)
+    raise ValueError(f"no multi-axis planner for op {op!r}")
+
+
+def bind_plan(record: Dict[str, Any], op: str,
+              axes: Sequence[str]) -> CollectivePlan:
+    """Rebind a positional plan record to concrete mesh axis names."""
+    axes = tuple(axes)
+    sizes = tuple(int(s) for s in record["sizes"])
+    steps = tuple(
+        PlanStep(kind=s["kind"],
+                 axes=tuple(axes[int(i)] for i in s["axes"]),
+                 algorithm=s["algorithm"], nbytes=int(s["nbytes"]))
+        for s in record["steps"])
+    cost_terms = {
+        shape: {"predicted": float(entry["predicted"]),
+                "axis_bytes": {axes[int(i)]: float(v)
+                               for i, v in entry["axis_bytes"].items()}}
+        for shape, entry in record["cost_terms"].items()}
+    return CollectivePlan(
+        op=op, axes=axes, axis_sizes=sizes, nbytes=int(record["nbytes"]),
+        shape=record["shape"], steps=steps,
+        predicted=float(record["predicted"]),
+        predictions={k: float(v)
+                     for k, v in record["predictions"].items()},
+        cost_terms=cost_terms, lower_bound=float(record["lower_bound"]))
+
+
+__all__ = ["CollectivePlan", "PlanStep", "plan_collective", "bind_plan",
+           "lower_bound_multi", "ALLREDUCE_SHAPES", "SHARDED_SHAPES"]

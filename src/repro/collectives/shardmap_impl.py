@@ -20,16 +20,23 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def _axis_size(axis: str) -> int:
+def _axis_size(axis) -> int:
     # jax >= 0.4.32 removed lax.axis_size; psum of a Python scalar is
     # evaluated statically under shard_map and returns the axis size.
+    # Accepts a tuple of axis names (folded logical axis, row-major).
     size = getattr(lax, "axis_size", None)
-    if size is not None:
+    if size is not None and not isinstance(axis, tuple):
         return size(axis)
     return lax.psum(1, axis)
 
 
-def _axis_index(axis: str):
+def _axis_index(axis):
+    """Linear index along an axis or a row-major-folded axis tuple."""
+    if isinstance(axis, tuple):
+        idx = lax.axis_index(axis[0])
+        for a in axis[1:]:
+            idx = idx * _axis_size(a) + lax.axis_index(a)
+        return idx
     return lax.axis_index(axis)
 
 
@@ -198,24 +205,29 @@ def allgather_ring(x: jax.Array, axis: str) -> jax.Array:
 
 
 def allgather_doubling(x: jax.Array, axis: str) -> jax.Array:
-    """Recursive-doubling all-gather (log2 P rounds, full-buffer sends);
-    latency-optimal for small shards.  P must be a power of two."""
+    """Recursive-doubling all-gather: log2 P rounds, round k exchanging
+    only the 2^k-shard block each device owns so far (wire total
+    B*(P-1)/P per device, exactly what ``t_doubling_allgather``
+    prices); latency-optimal for small shards.  P must be a power of
+    two."""
     p = _axis_size(axis)
     assert p & (p - 1) == 0, f"doubling allgather needs power-of-two P, {p}"
     idx = _axis_index(axis)
     m = x.shape[0]
-    acc = jnp.zeros((p,) + x.shape, x.dtype).at[idx].set(x)
-    slots = jnp.arange(p)
+    zeros_tail = (0,) * (x.ndim - 1)
+    out = jnp.zeros((p * m,) + x.shape[1:], x.dtype)
+    out = lax.dynamic_update_slice(out, x, (idx * m,) + zeros_tail)
     step = 1
     while step < p:
+        group = idx // step
+        sent = lax.dynamic_slice(out, (group * step * m,) + zeros_tail,
+                                 (step * m,) + x.shape[1:])
         pairs = [(i, i ^ step) for i in range(p)]
-        shifted = lax.ppermute(acc, axis, pairs)
-        # partner owned the sibling block of `step` slots; adopt it
-        recv_mask = (slots // step) == ((idx // step) ^ 1)
-        shape = (p,) + (1,) * x.ndim
-        acc = jnp.where(recv_mask.reshape(shape), shifted, acc)
+        recv = lax.ppermute(sent, axis, pairs)
+        out = lax.dynamic_update_slice(
+            out, recv, ((group ^ 1) * step * m,) + zeros_tail)
         step *= 2
-    return acc.reshape((p * m,) + x.shape[1:])
+    return out
 
 
 # ---------------------------------------------------------------------- #
@@ -255,6 +267,69 @@ def ring_allreduce(x: jax.Array, axis: str) -> jax.Array:
     chunks = lax.fori_loop(0, p - 1, ag_step, chunks)
     out = chunks.reshape((-1,) + x.shape[1:])
     return out[:n] if pad else out
+
+
+# ---------------------------------------------------------------------- #
+# 2D collectives (Sec. 7) over a pair of named mesh axes: axes[0] is the
+# outer (row-index, M rows) axis, axes[1] the inner (column-index, N
+# columns) axis -- the folded m x n grid the paper's 2D lemmas price.
+# ---------------------------------------------------------------------- #
+REDUCE_FNS = {"chain": chain_reduce, "tree": tree_reduce,
+              "two_phase": two_phase_reduce, "star": star_reduce}
+
+
+def xy_reduce_2d(x: jax.Array, axes: Tuple[str, str],
+                 patterns: Tuple[str, str] = ("chain", "chain")
+                 ) -> jax.Array:
+    """X-Y Reduce (Sec. 7.2): 1D reduce along every row (inner axis),
+    then along column 0 (outer axis).  ``patterns`` names the 1D pattern
+    per dimension, (outer, inner).  Result lands on device (0, 0)."""
+    x = REDUCE_FNS[patterns[1]](x, axes[1])
+    return REDUCE_FNS[patterns[0]](x, axes[0])
+
+
+def snake_reduce_2d(x: jax.Array, axes: Tuple[str, str]) -> jax.Array:
+    """Snake Reduce (Sec. 7.3): one pipelined chain over the
+    boustrophedon order of the M x N grid, every hop unit-distance.
+    Result lands on device (0, 0) (snake rank 0)."""
+    ay, ax = axes
+    m, n = _axis_size(ay), _axis_size(ax)
+    iy, ix = _axis_index(ay), _axis_index(ax)
+
+    def pos(rank: int) -> Tuple[int, int]:
+        y, k = divmod(rank, n)
+        return (y, k if y % 2 == 0 else n - 1 - k)
+
+    acc = x
+    for t in range(m * n - 1):
+        (ys, xs), (yd, xd) = pos(m * n - 1 - t), pos(m * n - 2 - t)
+        if ys == yd:
+            shifted = lax.ppermute(acc, ax, [(xs, xd)])
+        else:
+            shifted = lax.ppermute(acc, ay, [(ys, yd)])
+        recv = (ix == xd) & (iy == yd)
+        acc = jnp.where(recv, acc + shifted, acc)
+    return acc
+
+
+def broadcast_2d(x: jax.Array, axes: Tuple[str, str],
+                 root: Tuple[int, int] = (0, 0)) -> jax.Array:
+    """2D broadcast from ``root``: doubling down the root's column
+    (outer axis), then along every row (ICI has no multicast)."""
+    x = broadcast(x, axes[0], root=root[0])
+    return broadcast(x, axes[1], root=root[1])
+
+
+def xy_allreduce_2d(x: jax.Array, axes: Tuple[str, str],
+                    patterns: Tuple[str, str] = ("chain", "chain")
+                    ) -> jax.Array:
+    """2D AllReduce as X-Y Reduce + 2D broadcast (Sec. 7.4)."""
+    return broadcast_2d(xy_reduce_2d(x, axes, patterns), axes)
+
+
+def snake_allreduce_2d(x: jax.Array, axes: Tuple[str, str]) -> jax.Array:
+    """2D AllReduce as Snake Reduce + 2D broadcast (Sec. 7.4)."""
+    return broadcast_2d(snake_reduce_2d(x, axes), axes)
 
 
 # ---------------------------------------------------------------------- #
@@ -368,6 +443,8 @@ __all__ = [
     "chain_reduce", "tree_reduce", "two_phase_reduce", "star_reduce",
     "broadcast", "chain_broadcast", "ring_allreduce",
     "reduce_scatter_ring", "allgather_ring", "allgather_doubling",
+    "xy_reduce_2d", "snake_reduce_2d", "broadcast_2d", "xy_allreduce_2d",
+    "snake_allreduce_2d",
     "schedule_reduce", "schedule_reduce_pipelined", "schedule_broadcast",
     "schedule_reduce_scatter", "schedule_allgather",
 ]

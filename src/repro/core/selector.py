@@ -159,6 +159,33 @@ def heatmap_1d_allreduce(b_values: Sequence[int], p_values: Sequence[int],
     return grid
 
 
+def t_broadcast_2d_fabric(m: int, n: int, b: int,
+                          fabric: Fabric = WSE2) -> float:
+    """2D broadcast honoring the fabric: flooding multicast on the WSE
+    (Lemma 7.1), per-axis log-depth doubling where multicast is missing
+    (ICI) -- what the 2D shard_map implementation actually executes."""
+    if fabric.multicast:
+        return pat.t_broadcast_2d(m, n, b, fabric)
+    return (pat.t_doubling_broadcast(m, b, fabric)
+            + pat.t_doubling_broadcast(n, b, fabric))
+
+
+def predict_allreduce_2d(m: int, n: int, b: int, fabric: Fabric = WSE2
+                         ) -> Dict[str, float]:
+    """2D AllReduce candidates over an M x N grid (Sec. 7.4): every X-Y
+    pattern plus the snake, each composed with the fabric-appropriate
+    2D broadcast.  The seam the topology planner and the Fig. 10
+    heatmap share."""
+    bc = t_broadcast_2d_fabric(m, n, b, fabric)
+    preds: Dict[str, float] = {}
+    for name in ("star", "chain", "tree", "two_phase"):
+        if name == "tree" and ((m & (m - 1)) != 0 or (n & (n - 1)) != 0):
+            continue
+        preds[f"xy_{name}"] = pat.t_xy_reduce(name, m, n, b, fabric) + bc
+    preds["snake"] = pat.t_snake_reduce(m, n, b, fabric) + bc
+    return preds
+
+
 def heatmap_2d_allreduce(b_values: Sequence[int], side_values: Sequence[int],
                          fabric: Fabric = WSE2) -> List[List[str]]:
     """Best fixed 2D AllReduce (X-Y pattern + bcast, or snake + bcast)."""
@@ -166,14 +193,7 @@ def heatmap_2d_allreduce(b_values: Sequence[int], side_values: Sequence[int],
     for b in b_values:
         row = []
         for side in side_values:
-            preds: Dict[str, float] = {}
-            for name in ("star", "chain", "tree", "two_phase"):
-                if name == "tree" and (side & (side - 1)) != 0:
-                    continue
-                preds[f"xy_{name}"] = pat.t_reduce_bcast_2d(
-                    name, side, side, b, fabric)
-            preds["snake"] = pat.t_reduce_bcast_2d("snake", side, side, b,
-                                                   fabric)
+            preds = predict_allreduce_2d(side, side, b, fabric)
             row.append(min(preds, key=preds.get))
         grid.append(row)
     return grid
@@ -201,6 +221,7 @@ __all__ = [
     "Selection", "predict_reduce", "best_reduce", "predict_allreduce",
     "best_allreduce", "predict_reduce_scatter", "predict_allgather",
     "predict_broadcast", "predict_collective", "best_collective",
+    "predict_allreduce_2d", "t_broadcast_2d_fabric",
     "COLLECTIVE_OPS", "heatmap_1d_allreduce", "heatmap_2d_allreduce",
     "optimality_ratios",
 ]

@@ -29,7 +29,16 @@ from repro.models.frontend import audio_frames, vision_patches
 from repro.optim.adamw import AdamWConfig
 from repro.runtime import PreemptionGuard, StragglerDetector
 from repro.train.state import init_train_state
-from repro.train.step import make_train_step
+from repro.train.step import GradSyncConfig, make_train_step
+
+
+def make_dp_mesh():
+    """(pod, data) mesh over every visible device: the hierarchical DP
+    topology the collective planner plans for.  Two virtual pods when
+    the device count splits evenly, a single pod otherwise."""
+    nd = len(jax.devices())
+    pod = 2 if nd >= 4 and nd % 2 == 0 else 1
+    return jax.make_mesh((pod, nd // pod), ("pod", "data"))
 
 
 def build_batch(cfg, data_batch, key):
@@ -46,7 +55,8 @@ def build_batch(cfg, data_batch, key):
 def run(arch: str, steps: int, batch_size: int, seq_len: int,
         reduced: bool = True, ckpt_dir: str | None = None,
         ckpt_every: int = 50, lr: float = 3e-4, microbatches: int = 1,
-        log_every: int = 10, resume: bool = True):
+        log_every: int = 10, resume: bool = True, dp: bool = False,
+        grad_sync_mode: str = "allreduce"):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -69,8 +79,31 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
             start_step, state, meta = mgr.restore(state)
             print(f"[train] resumed from step {start_step}")
 
+    mesh = None
+    grad_sync = None
+    batch_sharding = None
+    if dp:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.sharding.rules import grad_sync_axes_for_mesh
+        mesh = make_dp_mesh()
+        axes = grad_sync_axes_for_mesh(mesh)
+        grad_sync = GradSyncConfig(mesh=mesh, axes=axes,
+                                   mode=grad_sync_mode)
+        n_dp = 1
+        for a in axes:
+            n_dp *= mesh.shape[a]
+        if axes and batch_size % n_dp == 0:
+            batch_sharding = NamedSharding(
+                mesh, P(axes if len(axes) > 1 else axes[0]))
+        elif n_dp > 1:
+            print(f"[train] WARNING: batch {batch_size} not divisible "
+                  f"by DP world {n_dp}; batch stays replicated (no DP "
+                  f"speedup, sync path still exercised)")
+        print(f"[train] dp mesh {dict(mesh.shape)} grad-sync axes "
+              f"{axes} mode={grad_sync_mode}")
     step_fn = jax.jit(make_train_step(cfg, opt_cfg,
-                                      microbatches=microbatches))
+                                      microbatches=microbatches,
+                                      grad_sync=grad_sync))
     guard = PreemptionGuard(install=True)
     stragglers = StragglerDetector()
     host = f"host{jax.process_index()}"
@@ -80,7 +113,14 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
         t0 = time.time()
         batch = build_batch(cfg, data.batch(step), jax.random.fold_in(key,
                                                                       step))
-        state, metrics = step_fn(state, batch)
+        if batch_sharding is not None:
+            batch = {k: jax.device_put(v, batch_sharding)
+                     for k, v in batch.items()}
+        if mesh is not None:
+            with mesh:
+                state, metrics = step_fn(state, batch)
+        else:
+            state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
         stragglers.record(host, time.time() - t0)
@@ -118,10 +158,18 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--dp", action="store_true",
+                    help="hierarchical (pod, data) DP over all devices; "
+                         "gradient sync through the collective planner")
+    ap.add_argument("--grad-sync", choices=("allreduce", "fsdp"),
+                    default="allreduce",
+                    help="engine sync shape under --dp: bucketed "
+                         "allreduce or the FSDP RS/AG pair")
     args = ap.parse_args()
     run(args.arch, args.steps, args.batch, args.seq, reduced=args.reduced,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
-        microbatches=args.microbatches)
+        microbatches=args.microbatches, dp=args.dp,
+        grad_sync_mode=args.grad_sync)
 
 
 if __name__ == "__main__":

@@ -55,6 +55,12 @@ class ShardingPolicy:
         n = self.axis_size(axis)
         return n > 0 and dim % n == 0
 
+    def grad_sync_axes(self) -> Tuple[str, ...]:
+        """The DP axes an explicit gradient sync must reduce over --
+        the axis tuple ``GradSyncConfig`` / the collective planner
+        consume (outermost first, size-1 axes dropped)."""
+        return tuple(a for a in self.data_axes if self.axis_size(a) > 1)
+
 
 def for_mesh(mesh: Mesh, fsdp: bool = True) -> ShardingPolicy:
     axes = mesh.axis_names
@@ -63,6 +69,11 @@ def for_mesh(mesh: Mesh, fsdp: bool = True) -> ShardingPolicy:
     return ShardingPolicy(fsdp=fsdp, data_axes=data_axes,
                           fsdp_axis="data" if fsdp else None,
                           axis_sizes=sizes)
+
+
+def grad_sync_axes_for_mesh(mesh: Mesh) -> Tuple[str, ...]:
+    """DP axis tuple a mesh implies for explicit gradient sync."""
+    return for_mesh(mesh).grad_sync_axes()
 
 
 # last-key -> spec over the *trailing* dims (leading stacked dims -> None)
@@ -226,6 +237,7 @@ def logits_spec(policy: ShardingPolicy) -> P:
 
 
 __all__ = [
-    "ShardingPolicy", "for_mesh", "spec_for_param", "param_sharding_tree",
+    "ShardingPolicy", "for_mesh", "grad_sync_axes_for_mesh",
+    "spec_for_param", "param_sharding_tree",
     "batch_specs", "labels_spec", "cache_specs", "logits_spec",
 ]

@@ -24,7 +24,7 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tf
-from repro.optim.adamw import AdamWConfig, apply_updates
+from repro.optim.adamw import AdamWConfig, AdamWState, apply_updates
 from repro.train.state import TrainState
 
 AUX_WEIGHT = 0.01
@@ -32,17 +32,33 @@ AUX_WEIGHT = 0.01
 
 @dataclasses.dataclass
 class GradSyncConfig:
-    """Explicit pure-DP gradient synchronization through the engine.
+    """Explicit DP gradient synchronization through the engine.
 
-    Params are replicated over ``axes``; after backward, gradients are
-    bucketed and AllReduced with per-bucket-size cached algorithm
-    selection (repro.collectives.overlap.bucketed_allreduce)."""
+    ``mode="allreduce"`` (default): params replicated over ``axes``;
+    after backward, gradients are bucketed and AllReduced with the
+    planner's per-bucket-size cached joint topology plan
+    (repro.collectives.overlap.bucketed_allreduce).
+
+    ``mode="fsdp"``: the ZeRO-style pair instead -- gradients are
+    reduce-scattered over ``axes`` (each device keeps its 1/P flat
+    shard), the AdamW update runs on the shard against flat sharded
+    optimizer state, and the updated params are allgathered -- with
+    both halves routed through the engine's topology-aware plans
+    instead of GSPMD's sharding-implied defaults.  ``compress`` is an
+    allreduce-mode knob and is ignored here; ``algorithm`` picks the
+    plan shape for all three phases ("auto" = planner argmin)."""
 
     mesh: Mesh
     axes: Tuple[str, ...] = ("data",)
     algorithm: str = "auto"
     bucket_bytes: int = 4 * 1024 * 1024
     compress: bool = False
+    mode: str = "allreduce"        # "allreduce" | "fsdp"
+
+    def __post_init__(self):
+        if self.mode not in ("allreduce", "fsdp"):
+            raise ValueError(f"unknown grad-sync mode {self.mode!r}; "
+                             f"expected 'allreduce' or 'fsdp'")
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -69,6 +85,94 @@ def loss_fn(params, cfg: ArchConfig, batch, remat: bool = True,
     ce = cross_entropy(logits, batch["labels"])
     loss = ce + AUX_WEIGHT * aux
     return loss, {"ce": ce, "aux": aux}
+
+
+def fsdp_sync_apply(opt_cfg: AdamWConfig, params, grads, opt,
+                    gs: GradSyncConfig):
+    """FSDP-style sync + update: reduce-scatter grads, AdamW on the
+    flat shard, allgather updated params -- every byte through the
+    CollectiveEngine's topology-aware plans.
+
+    Numerically equivalent to ``apply_updates`` on fully-synced grads
+    (same global clip, bias correction, and matrix-only weight decay;
+    fp32 accumulation throughout), but the optimizer state lives as
+    flat 1/P shards: ``opt.mu``/``opt.nu`` become single flat vectors,
+    padded to a multiple of the folded DP size and sharded over
+    ``gs.axes``.  A tree-shaped state (step 0, or a restored
+    allreduce-mode checkpoint) is flattened in place.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.collectives.api import get_engine
+    from repro.collectives.overlap import flatten_tree, unflatten_tree
+    from repro.optim.adamw import lr_at
+
+    if opt.master is not None:
+        raise NotImplementedError("fsdp grad-sync mode does not support "
+                                  "master_weights yet")
+    axes = tuple(gs.axes)
+    if not axes:
+        # no DP axes (single-device run): nothing to scatter/gather
+        return apply_updates(opt_cfg, params, grads, opt)
+    engine = get_engine()
+    sizes = tuple(gs.mesh.shape[a] for a in axes)
+    n_world = 1
+    for s in sizes:
+        n_world *= s
+
+    flat_g, _ = flatten_tree(grads)
+    flat_p, meta = flatten_tree(params)
+    decay = jnp.concatenate(
+        [jnp.full((l.size,), 1.0 if l.ndim >= 2 else 0.0, jnp.float32)
+         for l in jax.tree.leaves(params)])
+    n = flat_p.size
+    pad = (-n) % n_world
+    if pad:
+        z = jnp.zeros((pad,), jnp.float32)
+        flat_g, flat_p, decay = (jnp.concatenate([a, z])
+                                 for a in (flat_g, flat_p, decay))
+
+    mu, nu = opt.mu, opt.nu
+    mu_leaves = jax.tree.leaves(mu)
+    flat_state = (len(mu_leaves) == 1 and mu_leaves[0].ndim == 1
+                  and mu_leaves[0].size == n + pad)
+    if not flat_state:
+        mu, _ = flatten_tree(mu)
+        nu, _ = flatten_tree(nu)
+        if pad:
+            z = jnp.zeros((pad,), jnp.float32)
+            mu, nu = jnp.concatenate([mu, z]), jnp.concatenate([nu, z])
+
+    count = opt.count + 1
+    lr = lr_at(opt_cfg, count)
+    b1c = 1 - opt_cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - opt_cfg.b2 ** count.astype(jnp.float32)
+
+    def shard_fn(g, p32, dm, m, v):
+        g_s = engine.reduce_scatter_multi(g, axes,
+                                          algorithm=gs.algorithm)
+        g_s = g_s / float(n_world)      # mean over the DP world
+        sq = engine.allreduce_multi(jnp.sum(jnp.square(g_s)).reshape(1),
+                                    axes, algorithm=gs.algorithm)
+        gnorm = jnp.sqrt(sq[0])
+        gg = g_s * jnp.minimum(1.0, opt_cfg.grad_clip / (gnorm + 1e-9))
+        m2 = opt_cfg.b1 * m + (1 - opt_cfg.b1) * gg
+        v2 = opt_cfg.b2 * v + (1 - opt_cfg.b2) * jnp.square(gg)
+        step = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + opt_cfg.eps)
+        step = step + opt_cfg.weight_decay * dm * p32
+        w2 = p32 - lr * step
+        w_full = engine.allgather_multi(w2, axes,
+                                        algorithm=gs.algorithm)
+        return w_full, m2, v2, gnorm.reshape(1)
+
+    spec = P(axes if len(axes) > 1 else axes[0])
+    fn = shard_map(shard_fn, mesh=gs.mesh,
+                   in_specs=(P(), spec, spec, spec, spec),
+                   out_specs=(P(), spec, spec, P()), check_rep=False)
+    w_full, mu2, nu2, gnorm = fn(flat_g, flat_p, decay, mu, nu)
+    params2 = unflatten_tree(w_full[:n], meta)
+    opt2 = AdamWState(mu=mu2, nu=nu2, count=count, master=None)
+    return params2, opt2, {"grad_norm": gnorm[0], "lr": lr}
 
 
 def _split_microbatches(batch, n: int):
@@ -117,6 +221,13 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
             grads = jax.tree.map(lambda g: g * inv, grads)
             loss = loss * inv
             metrics = {}
+        if grad_sync is not None and grad_sync.mode == "fsdp":
+            # ZeRO-style pair: reduce-scatter grads, update the flat
+            # shard, allgather params -- all through the engine
+            params, opt, opt_metrics = fsdp_sync_apply(
+                opt_cfg, state.params, grads, state.opt, grad_sync)
+            out = {"loss": loss, **metrics, **opt_metrics}
+            return TrainState(params=params, opt=opt), out
         if grad_sync is not None:
             # explicit pure-DP sync: every gradient byte goes through the
             # CollectiveEngine's cached dispatch (import here to keep the
@@ -149,4 +260,4 @@ def make_decode_step(cfg: ArchConfig, unroll: bool = False):
 
 __all__ = ["cross_entropy", "loss_fn", "make_train_step",
            "make_prefill_step", "make_decode_step", "GradSyncConfig",
-           "AUX_WEIGHT"]
+           "fsdp_sync_apply", "AUX_WEIGHT"]

@@ -1,6 +1,12 @@
 """Multi-device collective correctness, via a subprocess with 8 virtual
 CPU devices (tests must not set xla_force_host_platform_device_count
-globally)."""
+globally).
+
+Covers the 1D backends, and the topology planner's joint multi-axis
+plans (hierarchical / 2D xy / 2D snake / flat / sequential) against the
+jax.lax references on the (2,2,2) and (2,4) debug meshes -- including
+the compress=True error-feedback path over an axis tuple and the FSDP
+GradSyncConfig mode against the GSPMD baseline."""
 
 import json
 import os
@@ -56,6 +62,81 @@ results["error_feedback_exists"] = ef is not None
 
 plan = bucket_algorithm_plan(grads, mesh, bucket_bytes=2048)
 results["plan_nonempty"] = len(plan) > 1
+
+# ---------------- topology planner: joint multi-axis plans ------------ #
+from repro.collectives.api import (allreduce_multi_inside,
+                                   reduce_scatter_multi_inside,
+                                   allgather_multi_inside)
+
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+x3 = jax.random.normal(jax.random.PRNGKey(2), (16, 6))
+
+def run3(fn, in_spec, out_spec):
+    f = shard_map(fn, mesh=mesh3, in_specs=in_spec, out_specs=out_spec,
+                  check_rep=False)
+    return np.asarray(jax.jit(f)(x3))
+
+for axes in (("pod", "data"), ("pod", "data", "model")):
+    ref = run3(lambda v: jax.lax.psum(v, axes), P(), P())
+    shapes = ("auto", "sequential", "hierarchical", "flat")
+    if len(axes) == 2:
+        shapes += ("2d_xy", "2d_snake")
+    for shape in shapes:
+        out = run3(functools.partial(allreduce_multi_inside, axes=axes,
+                                     algorithm=shape), P(), P())
+        results[f"ar_multi_{len(axes)}ax_{shape}"] = bool(
+            np.allclose(out, ref, rtol=1e-4, atol=1e-4))
+
+    ref = run3(lambda v: jax.lax.psum_scatter(v, axes,
+                                              scatter_dimension=0,
+                                              tiled=True), P(), P(axes))
+    for shape in ("auto", "cascade", "flat"):
+        out = run3(functools.partial(reduce_scatter_multi_inside,
+                                     axes=axes, algorithm=shape),
+                   P(), P(axes))
+        results[f"rs_multi_{len(axes)}ax_{shape}"] = bool(
+            np.allclose(out, ref, rtol=1e-4, atol=1e-4))
+
+    ref = run3(lambda v: jax.lax.all_gather(v, axes, tiled=True),
+               P(axes), P())
+    for shape in ("auto", "cascade", "flat"):
+        out = run3(functools.partial(allgather_multi_inside, axes=axes,
+                                     algorithm=shape), P(axes), P())
+        results[f"ag_multi_{len(axes)}ax_{shape}"] = bool(
+            np.allclose(out, ref))
+
+# (2, 4) debug mesh: planner plans over ("data", "model"), odd vector
+# length exercising the hierarchical pad path
+mesh24 = jax.make_mesh((2, 4), ("data", "model"))
+y = jax.random.normal(jax.random.PRNGKey(3), (13,))
+def run24(fn):
+    f = shard_map(fn, mesh=mesh24, in_specs=P(), out_specs=P(),
+                  check_rep=False)
+    return np.asarray(jax.jit(f)(y))
+ref = run24(lambda v: jax.lax.psum(v, ("data", "model")))
+for shape in ("auto", "hierarchical", "2d_xy", "2d_snake", "flat"):
+    out = run24(functools.partial(allreduce_multi_inside,
+                                  axes=("data", "model"),
+                                  algorithm=shape))
+    results[f"ar_multi_24_{shape}"] = bool(
+        np.allclose(out, ref, rtol=1e-4, atol=1e-4))
+
+# multi-axis bucketed allreduce: compress=True error-feedback over the
+# ("pod", "data") tuple routes each bucket through the planner
+mesh22 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+reduced, ef = bucketed_allreduce(
+    grads, mesh22, axes=("pod", "data"), bucket_bytes=2048,
+    compress=True,
+    error_feedback=jax.tree.map(jnp.zeros_like, grads))
+results["bucketed_multi_compressed"] = (
+    bool(np.allclose(np.asarray(reduced["a"]), 0.5, rtol=1e-2))
+    and bool(np.allclose(np.asarray(reduced["b"]), 2.0, rtol=1e-2))
+    and ef is not None)
+
+mplan = bucket_algorithm_plan(grads, mesh22, axes=("pod", "data"),
+                              bucket_bytes=2048)
+results["multi_plan_reports_shapes"] = len(mplan) > 1 and all(
+    "(" in desc for _, desc in mplan)
 print("JSON" + json.dumps(results))
 """
 

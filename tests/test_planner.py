@@ -1,0 +1,220 @@
+"""Topology-aware collective planner: joint multi-axis plans.
+
+Fast tier -- no devices needed.  Covers the acceptance properties of
+the planner itself (hierarchical moves strictly fewer modeled cross-pod
+bytes than sequential; nothing beats the 2D lower bound), the re-keyed
+persistent decision cache (topology signatures, schema v2, v1
+migration), and plan introspection.  Execution correctness against the
+jax.lax references lives in the multidev tier
+(tests/test_collectives_multidev.py, tests/test_engine.py).
+"""
+
+import json
+
+import pytest
+
+from repro.collectives import planner
+from repro.collectives.engine import (CollectiveEngine, ICI_ELEMENT_BYTES,
+                                      SCHEMA_VERSION)
+from repro.core.model import TPU_V5E_AXIS, WSE2
+
+
+def _engine(tmp_path, **kw):
+    return CollectiveEngine(cache_path=str(tmp_path / "decisions.json"),
+                            **kw)
+
+
+# --------------------------- plan properties -------------------------- #
+def test_hierarchical_moves_fewer_cross_pod_bytes(tmp_path):
+    """On the (2,2,2) debug mesh's ("pod","data") DP topology, the
+    hierarchical composition's cross-pod phase sees B/P_inner bytes
+    while the sequential loop ships the full vector -- asserted via
+    CollectivePlan.cost_terms, per bucket size."""
+    eng = _engine(tmp_path)
+    for nbytes in (1 << 10, 1 << 16, 1 << 22, 64 << 20):
+        plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 2),
+                              nbytes)
+        hier = plan.cost_terms["hierarchical"]["axis_bytes"]["pod"]
+        seq = plan.cost_terms["sequential"]["axis_bytes"]["pod"]
+        assert hier < seq, (nbytes, hier, seq)
+        assert hier == pytest.approx(seq / 2)   # inner axis size 2
+
+
+def test_planner_argmin_and_predictions(tmp_path):
+    eng = _engine(tmp_path)
+    plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 16), 1 << 22)
+    assert set(plan.predictions) == {"sequential", "hierarchical",
+                                     "2d_xy", "2d_snake", "flat"}
+    assert plan.predicted == min(plan.predictions.values())
+    assert plan.shape == min(plan.predictions, key=plan.predictions.get)
+    # hierarchical must beat sequential at DP-bucket sizes: its cross-pod
+    # phase runs on 1/16 of the bytes
+    assert (plan.predictions["hierarchical"]
+            < plan.predictions["sequential"])
+
+
+def test_no_plan_beats_2d_lower_bound(tmp_path):
+    """Every candidate shape of every multi-axis op stays above the
+    paper's Lemma 7.2 bound for its folded topology (the planner raises
+    on violation; this sweep exercises it across fabrics/shapes)."""
+    for fabric in (TPU_V5E_AXIS, WSE2):
+        eng = CollectiveEngine(fabric=fabric, persist=False)
+        for sizes in ((2, 2), (2, 4), (4, 4), (2, 2, 2), (1, 8)):
+            for op in ("allreduce", "reduce_scatter", "allgather"):
+                for nbytes in (512, 1 << 13, 1 << 20, 1 << 26):
+                    axes = tuple(f"a{i}" for i in range(len(sizes)))
+                    plan = eng.plan_multi(op, axes, sizes, nbytes)
+                    assert plan.predicted >= plan.lower_bound - 1e-6
+                    for shape, t in plan.predictions.items():
+                        assert t >= plan.lower_bound - 1e-6, (
+                            fabric.name, sizes, op, nbytes, shape)
+
+
+def test_forced_shape_and_describe(tmp_path):
+    eng = _engine(tmp_path)
+    plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 2), 1 << 20,
+                          shape="2d_snake")
+    assert plan.shape == "2d_snake"
+    assert plan.describe().startswith("2d_snake(")
+    plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 2), 1 << 20,
+                          shape="hierarchical")
+    kinds = [s.kind for s in plan.steps]
+    assert kinds == ["reduce_scatter", "allreduce", "allgather"]
+    assert plan.steps[0].axes == ("data",)      # inner first
+    assert plan.steps[1].axes == ("pod",)
+    with pytest.raises(ValueError):
+        eng.plan_multi("allreduce", ("pod", "data"), (2, 2), 1 << 20,
+                       shape="nonsense")
+
+
+def test_three_axis_hierarchy_recurses(tmp_path):
+    eng = _engine(tmp_path)
+    plan = eng.plan_multi("allreduce", ("pod", "data", "model"),
+                          (2, 2, 2), 1 << 20, shape="hierarchical")
+    rs, mid, ag = plan.steps
+    assert rs.axes == ("model",) and ag.axes == ("model",)
+    assert mid.axes == ("pod", "data")
+    # the middle step names a plan shape for the outer sub-topology
+    assert mid.algorithm in planner.ALLREDUCE_SHAPES
+    assert mid.nbytes < plan.nbytes
+
+
+def test_sharded_op_plans(tmp_path):
+    eng = _engine(tmp_path)
+    rs = eng.plan_multi("reduce_scatter", ("pod", "data"), (2, 4),
+                        1 << 20)
+    assert set(rs.predictions) == {"cascade", "flat"}
+    ag = eng.plan_multi("allgather", ("pod", "data"), (2, 4), 1 << 20)
+    assert set(ag.predictions) == {"cascade", "flat"}
+    # cascade reduce-scatter shrinks innermost-first
+    forced = eng.plan_multi("reduce_scatter", ("pod", "data"), (2, 4),
+                            1 << 20, shape="cascade")
+    assert [s.axes[0] for s in forced.steps] == ["data", "pod"]
+    assert forced.steps[0].nbytes > forced.steps[1].nbytes
+    # cascade allgather grows outermost-first (the exact inverse)
+    forced = eng.plan_multi("allgather", ("pod", "data"), (2, 4),
+                            1 << 20, shape="cascade")
+    assert [s.axes[0] for s in forced.steps] == ["pod", "data"]
+
+
+# --------------------------- cache behavior --------------------------- #
+def test_plan_cache_hit_miss_and_persistence(tmp_path):
+    eng = _engine(tmp_path)
+    p1 = eng.plan_multi("allreduce", ("pod", "data"), (2, 8), 1 << 20)
+    assert eng.stats["plan_misses"] == 1
+    p2 = eng.plan_multi("allreduce", ("pod", "data"), (2, 8), 1 << 20)
+    assert eng.stats["plan_hits"] == 1 and eng.stats["plan_misses"] == 1
+    assert p1 == p2
+    # different topology, same folded size: fresh plan
+    eng.plan_multi("allreduce", ("pod", "data"), (4, 4), 1 << 20)
+    assert eng.stats["plan_misses"] == 2
+    eng.flush()
+
+    eng2 = _engine(tmp_path)
+    q = eng2.plan_multi("allreduce", ("pod", "data"), (2, 8), 1 << 20)
+    assert eng2.stats["plan_misses"] == 0
+    assert eng2.stats["plan_hits"] == 1
+    assert q.shape == p1.shape
+    assert q.predictions == pytest.approx(p1.predictions)
+    # axis names rebind on retrieval: same topology, different mesh names
+    r = eng2.plan_multi("allreduce", ("x", "y"), (2, 8), 1 << 20)
+    assert r.steps[0].axes[0] in ("x", "y")
+
+
+def test_topology_signature_avoids_1d_collisions(tmp_path):
+    """A 16-way 'data' axis and a 16-way folded (2, 8) topology must
+    not share decision-cache entries."""
+    eng = _engine(tmp_path)
+    d_1d = eng.select("allreduce", 1 << 20, 16)
+    misses = eng.stats["misses"]
+    d_folded = eng.select("allreduce", 1 << 20, 16, topo=(2, 8))
+    assert eng.stats["misses"] == misses + 1, "folded topo hit 1D entry"
+    assert d_1d.p == d_folded.p == 16
+    # and the 1D entry is still served from cache
+    eng.select("allreduce", 1 << 20, 16)
+    assert eng.stats["misses"] == misses + 1
+
+
+def test_schema_v1_cache_migrates(tmp_path):
+    """A v1 (schema-less, 'op|p=..' keyed) decisions file loads into
+    the v2 engine: its entries are re-keyed as 1D topology signatures
+    and served as hits."""
+    eng = _engine(tmp_path)
+    d = eng.select("allreduce", 1 << 20, 8)
+    eng.flush()
+    path = str(tmp_path / "decisions.json")
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == SCHEMA_VERSION
+    legacy = {
+        "fabric": payload["fabric"],
+        "decisions": {k.replace("|t=", "|p=", 1): v
+                      for k, v in payload["decisions"].items()},
+    }
+    with open(path, "w") as f:
+        json.dump(legacy, f)
+
+    eng2 = _engine(tmp_path)
+    d2 = eng2.select("allreduce", 1 << 20, 8)
+    assert eng2.stats["misses"] == 0, "v1 entry was not migrated"
+    assert eng2.stats["hits"] == 1
+    assert d2.algorithm == d.algorithm
+    assert d2.predictions == pytest.approx(d.predictions)
+
+
+# ------------------------ simulator cross-check ----------------------- #
+def test_planner_2d_pricing_matches_flow_simulator():
+    """On the WSE2 fabric the planner's 2D candidates are exactly the
+    Sec.-7 closed forms the flow simulator validates: the snake
+    estimate must equal the simulator comparison's model column, and
+    the flow simulation itself must land within the paper's error
+    envelope."""
+    from repro.simulator.runner import compare_allreduce_2d
+
+    eng = CollectiveEngine(fabric=WSE2, persist=False)
+    for m, n in ((4, 4), (8, 8)):
+        for b in (64, 4096):
+            nbytes = b * ICI_ELEMENT_BYTES
+            plan = eng.plan_multi("allreduce", ("y", "x"), (m, n), nbytes)
+            cmp = compare_allreduce_2d("snake", m, n, b, WSE2)
+            assert plan.predictions["2d_snake"] == pytest.approx(
+                cmp.model_cycles)
+            assert cmp.rel_error < 0.35, (m, n, b, cmp)
+            # xy candidate: planner takes the best pattern per
+            # dimension, so it lower-bounds every uniform-pattern xy
+            for pattern in ("chain", "two_phase"):
+                uni = compare_allreduce_2d(pattern, m, n, b, WSE2)
+                assert (plan.predictions["2d_xy"]
+                        <= uni.model_cycles + 1e-6)
+
+
+def test_lower_bound_multi_folding():
+    b = 4096 * ICI_ELEMENT_BYTES
+    lb_22 = planner.lower_bound_multi("allreduce", (2, 2), b,
+                                      TPU_V5E_AXIS, ICI_ELEMENT_BYTES)
+    lb_44 = planner.lower_bound_multi("allreduce", (4, 4), b,
+                                      TPU_V5E_AXIS, ICI_ELEMENT_BYTES)
+    assert lb_44 >= lb_22 > 0
+    assert planner.lower_bound_multi("allreduce", (1, 1), b,
+                                     TPU_V5E_AXIS,
+                                     ICI_ELEMENT_BYTES) == 0.0

@@ -1,0 +1,126 @@
+"""Diff a BENCH_*.json artifact against a committed baseline and exit
+nonzero on regression -- the perf-trajectory gate.
+
+Only *deterministic* counters gate: compiled HLO collective bytes/op
+counts, scheduler step/token/preemption counts.  Wall-clock metrics
+(tok/s, TTFT) are printed for context but never fail the build -- CI
+timing is far too noisy for a 10% threshold.
+
+Usage::
+
+    python benchmarks/bench_diff.py BENCH_grad_sync.json \
+        --baseline benchmarks/baselines/grad_sync_small.json
+    python benchmarks/bench_diff.py BENCH_serve.json \
+        --baseline benchmarks/baselines/serve.json
+
+A current value is a regression when it is worse than baseline by more
+than ``--tolerance`` (default 10%).  Missing keys in the current run
+(a variant or counter that disappeared) also fail: silently dropping a
+measurement is how trajectories go dark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, Iterator, List, Tuple
+
+#: leaf keys that gate, and which direction is worse.
+GATED = {
+    # grad_sync: per-device compiled collective traffic + sequential depth
+    "bytes_per_dev": "higher_worse",
+    "ops": "higher_worse",
+    # serve: scheduler counters (deterministic for a fixed seed/config)
+    "decode_steps": "higher_worse",
+    "prefill_chunks": "higher_worse",
+    "preemptions": "higher_worse",
+    "tokens_out": "lower_worse",
+}
+
+#: reported for context only (timing noise)
+INFORMATIONAL = ("tok_per_s", "ttft_p50_ms", "ttft_p99_ms", "wall_s")
+
+
+def _walk(baseline: Any, current: Any, path: str = ""
+          ) -> Iterator[Tuple[str, str, float, Any]]:
+    """Yield (path, key, baseline_value, current_value_or_None) for
+    every gated leaf in the baseline."""
+    if not isinstance(baseline, dict):
+        return
+    for key, b_val in baseline.items():
+        sub = f"{path}/{key}" if path else key
+        if key in GATED and isinstance(b_val, (int, float)):
+            c_val = (current or {}).get(key) if isinstance(current, dict) \
+                else None
+            yield sub, key, float(b_val), c_val
+        elif isinstance(b_val, dict):
+            c_sub = current.get(key) if isinstance(current, dict) else None
+            yield from _walk(b_val, c_sub, sub)
+
+
+def diff(baseline: Dict, current: Dict, tolerance: float
+         ) -> Tuple[List[str], int]:
+    """Return (failure messages, checks run)."""
+    failures: List[str] = []
+    checked = 0
+    for path, key, b_val, c_val in _walk(baseline, current):
+        checked += 1
+        if c_val is None:
+            failures.append(f"{path}: present in baseline, missing in "
+                            f"current run")
+            continue
+        c_val = float(c_val)
+        if b_val == 0.0:
+            worse = (c_val > 0.0 if GATED[key] == "higher_worse"
+                     else c_val < 0.0)
+            rel = float("inf") if worse else 0.0
+        elif GATED[key] == "higher_worse":
+            rel = (c_val - b_val) / abs(b_val)
+        else:
+            rel = (b_val - c_val) / abs(b_val)
+        if rel > tolerance:
+            failures.append(
+                f"{path}: {b_val:g} -> {c_val:g} "
+                f"({rel * 100.0:+.1f}% worse, tolerance "
+                f"{tolerance * 100.0:.0f}%)")
+    return failures, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_*.json from this run")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative regression allowed (default 0.10)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    for key in INFORMATIONAL:
+        if key in baseline and key in current:
+            print(f"# info {key}: baseline {baseline[key]:g} -> "
+                  f"current {current[key]:g} (not gated)")
+
+    failures, checked = diff(baseline, current, args.tolerance)
+    if checked == 0:
+        print(f"bench_diff: no gated counters found in {args.baseline}",
+              file=sys.stderr)
+        return 2
+    if failures:
+        print(f"bench_diff: {len(failures)}/{checked} gated counters "
+              f"regressed vs {args.baseline}:", file=sys.stderr)
+        for msg in failures:
+            print(f"  REGRESSION {msg}", file=sys.stderr)
+        return 1
+    print(f"bench_diff: {checked} gated counters within "
+          f"{args.tolerance * 100.0:.0f}% of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,11 @@ Two tiers, both emitting ``BENCH_grad_sync.json``:
   mesh, sweeping every plan shape (incl. 2d_xy / 2d_snake) across
   bucket sizes -- the per-bucket heatmap of the multi-axis selector.
 
+``--fabric 'pod=slow,data=fast'`` (or a JSON topology file) prices the
+mesh with heterogeneous per-axis link constants; ``check()`` then also
+asserts the slow cross-pod link drives every bandwidth-bound bucket to
+the hierarchical composition.
+
 Metrics per variant: collective bytes/device from the per-device HLO,
 collective op count (sequential depth proxy), plus the spatial model's
 per-shape predictions and per-axis modeled wire bytes from
@@ -44,6 +49,11 @@ from jax.experimental.shard_map import shard_map
 from repro.collectives.api import (allreduce_inside, allreduce_multi_inside,
                                    select_algorithm)
 from repro.launch.roofline import parse_collective_bytes, collective_total
+
+FABRIC_SPEC = %(fabric_spec)r
+if FABRIC_SPEC:
+    from repro.launch.train import install_fabric_topology
+    install_fabric_topology(FABRIC_SPEC)
 
 mesh = jax.make_mesh(%(mesh_shape)s, %(mesh_axes)s)
 AXES = ("pod", "data")
@@ -94,12 +104,18 @@ SMALL_VARIANTS = ("psum_flat", "sequential", "hierarchical", "2d_xy",
                   "2d_snake", "flat", "auto")
 
 
-def _model_plans(pod: int, data: int, bucket_sizes):
+def _model_plans(pod: int, data: int, bucket_sizes,
+                 fabric_spec: str | None = None):
     """Planner-side view: per-bucket joint predictions + per-axis
     modeled wire bytes (no devices needed)."""
     from repro.collectives.engine import CollectiveEngine
 
-    eng = CollectiveEngine(persist=False)
+    if fabric_spec:
+        from repro.core.model import parse_fabric_topology
+        eng = CollectiveEngine(fabric=parse_fabric_topology(fabric_spec),
+                              persist=False)
+    else:
+        eng = CollectiveEngine(persist=False)
     out = {}
     for nbytes in bucket_sizes:
         plan = eng.plan_multi("allreduce", ("pod", "data"), (pod, data),
@@ -114,7 +130,8 @@ def _model_plans(pod: int, data: int, bucket_sizes):
     return out
 
 
-def run(small: bool = False, verbose: bool = True):
+def run(small: bool = False, verbose: bool = True,
+        fabric_spec: str | None = None):
     if small:
         devices, mesh_shape, mesh_axes = 8, (2, 4), ("pod", "data")
         bucket_sizes = (1 << 16, 1 << 20, 16 << 20)
@@ -127,7 +144,7 @@ def run(small: bool = False, verbose: bool = True):
     child = _CHILD % {
         "devices": devices, "mesh_shape": mesh_shape,
         "mesh_axes": mesh_axes, "bucket_sizes": list(bucket_sizes),
-        "variants": list(variants),
+        "variants": list(variants), "fabric_spec": fabric_spec,
         "plan_shapes": ["sequential", "hierarchical", "2d_xy",
                         "2d_snake", "flat"],
     }
@@ -144,7 +161,8 @@ def run(small: bool = False, verbose: bool = True):
     results = json.loads(line[4:])
     pod, data = mesh_shape[0], mesh_shape[1]
     results["mesh"] = {"pod": pod, "data": data}
-    results["model"] = _model_plans(pod, data, bucket_sizes)
+    results["fabric_spec"] = fabric_spec
+    results["model"] = _model_plans(pod, data, bucket_sizes, fabric_spec)
     if verbose:
         for nbytes in bucket_sizes:
             per = results[str(nbytes)]
@@ -158,12 +176,15 @@ def run(small: bool = False, verbose: bool = True):
 
 def check(results):
     """Invariants the perf trajectory must keep."""
+    hetero = bool(results.get("fabric_spec"))
     for nbytes, model in results["model"].items():
         per = results[nbytes]
         # hierarchical moves strictly fewer modeled cross-pod bytes
         # than the sequential per-axis path
         ab = model["axis_bytes"]
         assert ab["hierarchical"]["pod"] < ab["sequential"]["pod"], nbytes
+        # ... and than the flat folded schedule
+        assert ab["hierarchical"]["pod"] < ab["flat"]["pod"], nbytes
         # no shape beats the 2D lower bound
         assert all(t >= model["lower_bound"] - 1e-6
                    for t in model["predictions"].values()), nbytes
@@ -179,11 +200,17 @@ def check(results):
         best = min(model["predictions"], key=model["predictions"].get)
         assert (per["auto"]["bytes_per_dev"]
                 == per[best]["bytes_per_dev"]), (nbytes, best)
-    assert results["selector_choice"]["data_axis"] == "ring"
+        # a slow cross-pod link must drive the joint argmin to the
+        # hierarchical composition at bandwidth-bound bucket sizes
+        if hetero and int(nbytes) >= 1 << 20:
+            assert best == "hierarchical", (nbytes, best)
+    if not hetero:
+        assert results["selector_choice"]["data_axis"] == "ring"
 
 
-def main(out_path: str = "BENCH_grad_sync.json", small: bool = False):
-    results = run(small=small)
+def main(out_path: str = "BENCH_grad_sync.json", small: bool = False,
+         fabric_spec: str | None = None):
+    results = run(small=small, fabric_spec=fabric_spec)
     check(results)
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -195,6 +222,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
                     help="8-device debug mesh, full shape sweep (CI)")
+    ap.add_argument("--fabric", default=None, metavar="SPEC",
+                    help="heterogeneous topology spec "
+                         "('pod=slow,data=fast' or a JSON path)")
     ap.add_argument("--out", default="BENCH_grad_sync.json")
     args = ap.parse_args()
-    main(out_path=args.out, small=args.small)
+    main(out_path=args.out, small=args.small, fabric_spec=args.fabric)

@@ -25,20 +25,22 @@ cache.
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import jax
 from jax.sharding import Mesh
 
-from repro.core.model import TPU_V5E_AXIS, Fabric
+from repro.core.model import TPU_V5E_AXIS, Fabric, FabricTopology
 from repro.collectives.engine import CollectiveEngine
 
-_ENGINES: Dict[Fabric, CollectiveEngine] = {}
+_FabricKey = Union[Fabric, FabricTopology]
+_ENGINES: Dict[_FabricKey, CollectiveEngine] = {}
 _ENGINES_LOCK = threading.Lock()
 
 
-def get_engine(fabric: Fabric = TPU_V5E_AXIS) -> CollectiveEngine:
-    """Process-wide engine for a fabric (shared decision cache)."""
+def get_engine(fabric: _FabricKey = TPU_V5E_AXIS) -> CollectiveEngine:
+    """Process-wide engine for a fabric or fabric topology (shared
+    decision cache)."""
     with _ENGINES_LOCK:
         eng = _ENGINES.get(fabric)
         if eng is None:
@@ -48,8 +50,13 @@ def get_engine(fabric: Fabric = TPU_V5E_AXIS) -> CollectiveEngine:
 
 
 def set_engine(engine: CollectiveEngine,
-               fabric: Optional[Fabric] = None) -> None:
-    """Install ``engine`` as the default for its (or ``fabric``'s) key."""
+               fabric: Optional[_FabricKey] = None) -> None:
+    """Install ``engine`` as the default for its (or ``fabric``'s) key.
+
+    An engine built on a heterogeneous :class:`FabricTopology` keys by
+    its *default* fabric, so installing one reroutes every call site
+    that asks for the plain default (the train/serve paths) through the
+    per-axis constants."""
     with _ENGINES_LOCK:
         _ENGINES[fabric or engine.fabric] = engine
 

@@ -17,7 +17,11 @@ computation:
   re-runs the DP either.
 * **Calibration** -- ``calibrate()`` refits the Fabric constants from
   measured ppermute timings (``measure_ppermute``), so selection tracks
-  the actual backend instead of the baked-in ICI constants.
+  the actual backend instead of the baked-in ICI constants.  With a
+  mesh (or per-axis measurement dicts) it fits one Fabric *per mesh
+  axis* on a shared time base, producing a heterogeneous
+  ``FabricTopology`` -- pod links slower than intra-pod ICI -- that the
+  planner prices per axis and the v3 cache persists.
 
 Dispatch flow::
 
@@ -48,7 +52,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.autogen import autogen_tree, cache_dir, compute_tables
-from repro.core.model import Fabric, TPU_V5E_AXIS
+from repro.core.model import (Fabric, FabricTopology, TPU_V5E_AXIS,
+                              as_topology)
 from repro.core import selector
 from repro.collectives import planner
 from repro.collectives import shardmap_impl as impl
@@ -62,9 +67,14 @@ MODEL_VERSION = 1
 
 #: persisted-file layout version.  v2 keys decisions by the full
 #: topology signature (``op|t=2x8|B=...``) instead of the bare axis size
-#: (``op|p=16|B=...``) and adds the ``plans`` section; v1 files are
-#: migrated on load (their keys are 1D signatures by construction).
-SCHEMA_VERSION = 2
+#: (``op|p=16|B=...``) and adds the ``plans`` section; v3 namespaces the
+#: file by the full *fabric topology* (per-axis constants in the tag,
+#: ``|f=`` key suffixes for non-default axis fabrics) and persists the
+#: topology itself in a ``topology`` section so per-axis calibrations
+#: survive the process.  v1/v2 files are migrated on load (v1 keys are
+#: 1D signatures by construction; v2 keys are already topology
+#: signatures, and a uniform topology's tag equals the v2 tag).
+SCHEMA_VERSION = 3
 
 Rounds = Tuple[Tuple[Tuple[int, int], ...], ...]
 
@@ -90,30 +100,53 @@ class Decision:
     rounds: Optional[Rounds] = None   # Auto-Gen schedule, when selected
 
 
-def fit_fabric(measurements: Sequence[Tuple[int, float]],
-               base: Fabric = TPU_V5E_AXIS, name: Optional[str] = None,
-               element_bytes: int = ICI_ELEMENT_BYTES) -> Fabric:
-    """Fit Fabric constants from measured one-hop ppermute timings.
-
-    ``measurements`` is a sequence of ``(nbytes, seconds)`` for a single
-    neighbor ppermute.  Under the model a hop costs
-    ``(2*t_r + B) * cycle`` seconds with B in elements, so a least-squares
-    line ``seconds = alpha + beta * B`` recovers ``cycle = beta`` and
-    ``t_r = alpha / (2 * beta)``.  Only the *ratios* enter selection, so
-    the returned Fabric keeps the model's unit convention (1 cycle = one
-    element over one link).
-    """
+def _fit_line(measurements: Sequence[Tuple[int, float]],
+              element_bytes: int) -> Tuple[float, float]:
+    """Least-squares ``seconds = alpha + beta * B`` over one axis's
+    neighbor-ppermute timings; returns the raw ``(alpha, beta)`` --
+    callers decide how to treat a degenerate (non-positive) slope."""
     if len(measurements) < 2:
         raise ValueError("need >= 2 (nbytes, seconds) points to calibrate")
     els = np.array([max(1, nb // element_bytes) for nb, _ in measurements],
                    dtype=np.float64)
     secs = np.array([t for _, t in measurements], dtype=np.float64)
     beta, alpha = np.polyfit(els, secs, 1)
-    beta = max(float(beta), 1e-30)
-    t_r = max(float(alpha) / (2.0 * beta), 0.0)
+    return float(alpha), float(beta)
+
+
+def fit_fabric(measurements: Sequence[Tuple[int, float]],
+               base: Fabric = TPU_V5E_AXIS, name: Optional[str] = None,
+               element_bytes: int = ICI_ELEMENT_BYTES,
+               ref_cycle: Optional[float] = None) -> Fabric:
+    """Fit Fabric constants from measured one-hop ppermute timings.
+
+    ``measurements`` is a sequence of ``(nbytes, seconds)`` for a single
+    neighbor ppermute.  Under the model a hop costs
+    ``(2*t_r + B / link_bw) * cycle`` seconds with B in elements, so a
+    least-squares line ``seconds = alpha + beta * B`` recovers the
+    constants.  With ``ref_cycle=None`` the axis defines its own time
+    base (``cycle = beta``, ``t_r = alpha / (2 * beta)``,
+    ``link_bw = base.link_bw``) -- only the ratios enter 1D selection.
+    Fitting several axes of one mesh needs a *shared* time base so their
+    prices are comparable inside one plan: pass the fastest axis's beta
+    as ``ref_cycle`` and the fit recovers ``link_bw = ref_cycle / beta``
+    (< 1 for slower links) and ``t_r = alpha / (2 * ref_cycle)``.
+    """
+    alpha, beta = _fit_line(measurements, element_bytes)
+    beta = max(beta, 1e-30)
+    if ref_cycle is None:
+        # the fitted slope is cycle / link_bw; keeping base.link_bw
+        # means the implied cycle is beta * link_bw, and t_r must be
+        # expressed in those cycles
+        t_r = max(alpha / (2.0 * beta * base.link_bw), 0.0)
+        link_bw = base.link_bw
+    else:
+        ref = max(float(ref_cycle), 1e-30)
+        t_r = max(alpha / (2.0 * ref), 0.0)
+        link_bw = ref / beta
     return Fabric(name=name or f"{base.name}_calibrated",
                   t_r=t_r, store_cost=base.store_cost,
-                  link_bw=base.link_bw, multicast=base.multicast)
+                  link_bw=link_bw, multicast=base.multicast)
 
 
 def measure_ppermute(mesh: Mesh, axis: str,
@@ -142,18 +175,66 @@ def measure_ppermute(mesh: Mesh, axis: str,
     return out
 
 
+def fabric_to_dict(f: Fabric) -> Dict[str, Any]:
+    return {"name": f.name, "t_r": f.t_r, "store_cost": f.store_cost,
+            "link_bw": f.link_bw, "multicast": f.multicast}
+
+
+def _fabric_from_dict(d: Dict[str, Any]) -> Fabric:
+    return Fabric(name=str(d["name"]), t_r=float(d["t_r"]),
+                  store_cost=float(d["store_cost"]),
+                  link_bw=float(d.get("link_bw", 1.0)),
+                  multicast=bool(d.get("multicast", True)))
+
+
+def topology_to_dict(t: FabricTopology) -> Dict[str, Any]:
+    return {"name": t.name, "default": fabric_to_dict(t.default),
+            "axes": {axis: fabric_to_dict(f)
+                     for axis, f in t.axis_fabrics}}
+
+
+def topology_from_dict(d: Dict[str, Any]) -> FabricTopology:
+    return FabricTopology(
+        default=_fabric_from_dict(d["default"]),
+        axis_fabrics=tuple((axis, _fabric_from_dict(fd))
+                           for axis, fd in d.get("axes", {}).items()),
+        name=str(d.get("name", "")))
+
+
+def load_topology(path: str) -> Optional[FabricTopology]:
+    """Read the fabric topology a v3 cache file was computed under
+    (None for v1/v2 files or unreadable paths) -- how a fresh process
+    restores a prior per-axis calibration."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    topo = payload.get("topology")
+    if not topo:
+        return None
+    try:
+        return topology_from_dict(topo)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
 class CollectiveEngine:
     """Cached, model-driven dispatch for every collective op.
 
-    One engine per Fabric parameterization; ``api.get_engine()`` hands
-    out a process-wide default keyed by fabric so all call sites share
-    one decision cache.
+    One engine per fabric-topology parameterization; ``api.get_engine()``
+    hands out a process-wide default keyed by fabric so all call sites
+    share one decision cache.  ``fabric`` may be a bare :class:`Fabric`
+    (every axis priced the same -- the uniform fast path) or a
+    :class:`FabricTopology` mapping mesh axis names to per-axis
+    constants, in which case the planner prices each phase with the
+    constants of the axes it actually traverses.
     """
 
-    def __init__(self, fabric: Fabric = TPU_V5E_AXIS,
+    def __init__(self, fabric: "Fabric | FabricTopology" = TPU_V5E_AXIS,
                  cache_path: Optional[str] = None, persist: bool = True,
                  element_bytes: int = ICI_ELEMENT_BYTES):
-        self.fabric = fabric
+        self.topology = as_topology(fabric)
         self.element_bytes = element_bytes
         self._persist = persist
         self._cache_path_override = cache_path
@@ -171,14 +252,30 @@ class CollectiveEngine:
         if persist:
             atexit.register(self.flush)
 
+    @property
+    def fabric(self) -> Fabric:
+        """The topology's default fabric (the pre-topology engines'
+        single Fabric; per-axis overrides live in ``self.topology``)."""
+        return self.topology.default
+
     # ------------------------------------------------------------------ #
     # decision cache
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _fabric_one_tag(f: Fabric) -> str:
+        return (f"{f.name}_tr{f.t_r:g}_st{f.store_cost:g}"
+                f"_bw{f.link_bw:g}_mc{int(f.multicast)}")
+
     def _fabric_tag(self) -> str:
-        f = self.fabric
-        return (f"{f.name}_tr{f.t_r:g}_st{f.store_cost:g}_bw{f.link_bw:g}"
-                f"_mc{int(f.multicast)}_eb{self.element_bytes}"
-                f"_v{MODEL_VERSION}")
+        """Cache namespace: the full topology signature.  A uniform
+        topology produces exactly the v2 single-fabric tag, so uniform
+        engines keep their existing cache files; per-axis overrides
+        append to the tag (fresh namespace per calibration)."""
+        tag = (f"{self._fabric_one_tag(self.topology.default)}"
+               f"_eb{self.element_bytes}_v{MODEL_VERSION}")
+        for axis, f in self.topology.axis_fabrics:
+            tag += f"__{axis}-{self._fabric_one_tag(f)}"
+        return tag
 
     def _cache_path(self) -> str:
         if self._cache_path_override:
@@ -204,10 +301,13 @@ class CollectiveEngine:
             return
         # decisions are only valid for the constants they were computed
         # under (matters when cache_path pins the file name but
-        # calibrate() swaps the fabric)
+        # calibrate() swaps the fabric); a uniform topology's tag equals
+        # the v2 single-fabric tag, so v2 files migrate transparently
         if payload.get("fabric") != self._fabric_tag():
             return
         schema = int(payload.get("schema", 1))
+        if schema > SCHEMA_VERSION:
+            return     # written by a newer build; recompute instead
         for key, d in payload.get("decisions", {}).items():
             if schema < 2:
                 # v1 keys are "op|p=8|B=..."; every v1 entry is a bare
@@ -257,6 +357,7 @@ class CollectiveEngine:
             with open(tmp, "w") as f:
                 json.dump({"schema": SCHEMA_VERSION,
                            "fabric": self._fabric_tag(),
+                           "topology": topology_to_dict(self.topology),
                            "decisions": raw, "plans": self._plans}, f)
             os.replace(tmp, path)
         except OSError:
@@ -273,29 +374,45 @@ class CollectiveEngine:
             self._tables[p] = tables
         return tables
 
-    def tree_rounds(self, p: int, b_elements: int) -> Rounds:
-        """Auto-Gen round schedule for (P, B), DP'd at most once."""
+    def tree_rounds(self, p: int, b_elements: int,
+                    fabric: Optional[Fabric] = None) -> Rounds:
+        """Auto-Gen round schedule for (P, B, fabric), DP'd at most
+        once; ``fabric`` defaults to the topology's default fabric."""
+        fab = fabric or self.topology.default
         with self._lock:
-            key = (p, b_elements)
+            key = (p, b_elements, fab)
             rounds = self._tree_rounds.get(key)
             if rounds is None:
                 self.stats["dp_runs"] += 1
-                tree = autogen_tree(p, b_elements, fabric=self.fabric,
+                tree = autogen_tree(p, b_elements, fabric=fab,
                                     tables=self._tables_for(p))
                 rounds = _freeze_rounds(tree.to_rounds())
                 self._tree_rounds[key] = rounds
             return rounds
 
+    def _fabric_key_suffix(self, fabric: Optional[Fabric]) -> str:
+        """Per-axis constants enter the cache key only when they differ
+        from the default fabric, so uniform topologies keep the exact v2
+        key space."""
+        if fabric is None or fabric == self.topology.default:
+            return ""
+        return f"|f={self._fabric_one_tag(fabric)}"
+
     def select(self, op: str, nbytes: int, p: int,
-               topo: Optional[Tuple[int, ...]] = None) -> Decision:
+               topo: Optional[Tuple[int, ...]] = None,
+               fabric: Optional[Fabric] = None) -> Decision:
         """Model-driven selection, memoized by the full topology
         signature ``(op, axis_sizes, bytes, fabric)``.
 
         For a bare 1D axis the signature is ``(p,)``; a folded logical
         axis passes its shape as ``topo`` (e.g. ``(2, 8)``) so a 16-way
         ``data`` axis and a 16-way folded ``(pod, data)`` topology never
-        share cache entries even though their modeled costs coincide
-        today -- calibration may split them later.
+        share cache entries even though their modeled costs coincide on
+        a uniform fabric -- per-axis calibration splits them.
+        ``fabric`` prices the candidate set with axis-local constants (a
+        non-default axis of a heterogeneous topology); such decisions
+        are keyed with an ``|f=`` suffix so the same axis size under
+        different link constants never collides.
 
         ``allreduce`` keeps the paper-selector candidate set (fixed
         patterns + ring); the other ops additionally model their
@@ -304,9 +421,11 @@ class CollectiveEngine:
         """
         if p <= 1:
             return Decision(op, p, nbytes, "identity", 0.0, {})
+        fab = fabric or self.topology.default
         with self._lock:
             self._load_persisted()
-            key = _topo_key(op, topo or (p,), nbytes)
+            key = (_topo_key(op, topo or (p,), nbytes)
+                   + self._fabric_key_suffix(fabric))
             hit = self._decisions.get(key)
             if hit is not None:
                 self.stats["hits"] += 1
@@ -319,14 +438,15 @@ class CollectiveEngine:
             else:
                 tables = None
             preds = selector.predict_collective(
-                op, p, b, self.fabric, include_autogen=include_autogen,
+                op, p, b, fab, include_autogen=include_autogen,
                 tables=tables)
             if op == "allreduce":
                 # the paper's TPU selector: star loses to its own
                 # broadcast on ICI, so it is not a candidate
                 preds.pop("star", None)
             name = min(preds, key=preds.get)
-            rounds = (self.tree_rounds(p, self._tree_elements(op, b, p))
+            rounds = (self.tree_rounds(p, self._tree_elements(op, b, p),
+                                       fabric=fab)
                       if name == "autogen" else None)
             decision = Decision(op, p, nbytes, name, preds[name],
                                 {k: float(v) for k, v in preds.items()},
@@ -342,6 +462,14 @@ class CollectiveEngine:
         """Topology-aware joint plan for an axis tuple, memoized and
         persisted by ``(op, axis_sizes, bytes, fabric)``.
 
+        Each axis is priced with its fabric from ``self.topology`` (by
+        axis *name*), so hierarchical compositions genuinely win when
+        pod links are slower than intra-pod ICI.  Plans whose axes use
+        non-default fabrics carry those constants in the cache key --
+        the same ``(2, 8)`` shape under different axis bindings never
+        collides; uniform topologies keep the exact v2 key space and
+        rebind freely across mesh axis names.
+
         ``shape`` forces a candidate ("hierarchical", "2d_xy", ...)
         instead of taking the model argmin; forced plans are derived
         from the same scored record, so they are cached once too.
@@ -350,9 +478,13 @@ class CollectiveEngine:
         sizes = tuple(int(s) for s in sizes)
         if len(axes) != len(sizes):
             raise ValueError(f"axes {axes} vs sizes {sizes}")
+        axis_fabrics = tuple(self.topology.for_axis(a) for a in axes)
         with self._lock:
             self._load_persisted()
             key = _topo_key(op, sizes, nbytes)
+            if any(f != self.topology.default for f in axis_fabrics):
+                key += "|f=" + ",".join(self._fabric_one_tag(f)
+                                        for f in axis_fabrics)
             if shape is not None:
                 key += f"|shape={shape}"
             rec = self._plans.get(key)
@@ -360,7 +492,8 @@ class CollectiveEngine:
                 self.stats["plan_misses"] += 1
                 rec = planner.plan_collective(
                     op, sizes, nbytes, self.fabric, self.element_bytes,
-                    self.select, force_shape=shape)
+                    self.select, force_shape=shape,
+                    axis_fabrics=axis_fabrics)
                 self._plans[key] = rec
                 self._dirty = True
                 self._maybe_save()
@@ -387,29 +520,92 @@ class CollectiveEngine:
     # calibration
     # ------------------------------------------------------------------ #
     def calibrate(self,
-                  measurements: Optional[Sequence[Tuple[int, float]]] = None,
-                  mesh: Optional[Mesh] = None, axis: str = "data",
+                  measurements: Optional[Any] = None,
+                  mesh: Optional[Mesh] = None, axis: Optional[str] = None,
                   sizes_bytes: Sequence[int] = (1 << 12, 1 << 16, 1 << 20,
-                                                1 << 22)) -> Fabric:
-        """Refit the fabric from timings and drop stale decisions.
+                                                1 << 22)
+                  ) -> "Fabric | FabricTopology":
+        """Refit the fabric constants from timings and drop stale
+        decisions.
 
-        Pass explicit ``measurements`` (e.g. from a fleet microbenchmark
-        artifact) or a ``mesh`` to run ``measure_ppermute`` in place.
+        * ``measurements=[(nbytes, seconds), ...]`` -- refit the default
+          fabric (uniform topology); returns the fitted :class:`Fabric`.
+        * ``measurements={axis: [(nbytes, seconds), ...], ...}`` -- fit
+          one Fabric *per axis* on a shared time base: the fastest
+          axis's fitted cycle anchors ``link_bw=1`` and slower axes get
+          proportionally smaller ``link_bw`` (and their own ``t_r``).
+          Returns the new :class:`FabricTopology`.
+        * ``mesh=...`` -- run ``measure_ppermute`` per mesh axis (every
+          axis of size > 1, or just ``axis`` if given) and fit per-axis
+          as above.
+
+        Either way the engine's cache namespace moves to the new
+        constants; the next persisted save records the topology in the
+        v3 ``topology`` section.
         """
         if measurements is None:
             if mesh is None:
                 raise ValueError("calibrate() needs measurements or a mesh")
-            measurements = measure_ppermute(mesh, axis, sizes_bytes)
+            axes = ([axis] if axis is not None
+                    else [a for a in mesh.axis_names if mesh.shape[a] > 1])
+            if not axes:
+                raise ValueError(
+                    f"calibrate(mesh=...): no axis of size > 1 to "
+                    f"measure in mesh {dict(mesh.shape)}")
+            measurements = {a: measure_ppermute(mesh, a, sizes_bytes)
+                            for a in axes}
         with self._lock:
-            self.fabric = fit_fabric(measurements, base=self.fabric,
-                                     element_bytes=self.element_bytes)
+            base = self.topology.default
+            if isinstance(measurements, dict):
+                if not measurements:
+                    raise ValueError("calibrate() got an empty per-axis "
+                                     "measurements dict")
+                lines = {a: _fit_line(m, self.element_bytes)
+                         for a, m in measurements.items()}
+                # a non-positive -- or vanishing -- fitted slope means
+                # the timings carry no bandwidth signal; anchoring the
+                # shared time base on it would poison every axis's
+                # constants (link_bw ratios of ~1e-20) -- fail loudly
+                bad = []
+                for a, m in measurements.items():
+                    alpha, beta = lines[a]
+                    els = [max(1, nb // self.element_bytes)
+                           for nb, _ in m]
+                    rise = beta * (max(els) - min(els))
+                    scale = abs(alpha) + abs(beta) * max(els) + 1e-30
+                    if beta <= 0.0 or rise < 1e-6 * scale:
+                        bad.append(a)
+                bad.sort()
+                if bad:
+                    raise ValueError(
+                        f"calibrate(): non-positive fitted slope for "
+                        f"axis(es) {bad}; timings are noise-dominated "
+                        f"-- raise sizes_bytes/repeats or calibrate "
+                        f"those axes separately")
+                # shared time base: the fastest axis's seconds/element
+                ref = min(beta for _, beta in lines.values())
+                fitted = tuple(
+                    (a, fit_fabric(measurements[a], base=base,
+                                   name=f"{base.name}_{a}",
+                                   element_bytes=self.element_bytes,
+                                   ref_cycle=ref))
+                    for a in sorted(measurements))
+                result: "Fabric | FabricTopology" = FabricTopology(
+                    default=base, axis_fabrics=fitted,
+                    name=f"{base.name}_calibrated")
+                self.topology = result
+            else:
+                fitted_f = fit_fabric(measurements, base=base,
+                                      element_bytes=self.element_bytes)
+                self.topology = FabricTopology.uniform(fitted_f)
+                result = fitted_f
             # fabric changed => cache namespace (file name) changed too;
             # in-memory decisions and plans predate the new constants
             self._decisions.clear()
             self._plans.clear()
             self._tree_rounds.clear()
             self._loaded = False
-        return self.fabric
+        return result
 
     # ------------------------------------------------------------------ #
     # dispatch: *_inside run under an existing shard_map axis binding
@@ -423,16 +619,20 @@ class CollectiveEngine:
             return max(1, -(-b // p))
         return b
 
-    def _resolve(self, op: str, nbytes: int, p: int, algorithm: str
-                 ) -> Tuple[str, Optional[Rounds]]:
+    def _resolve(self, op: str, nbytes: int, p: int, algorithm: str,
+                 axis: Any = None) -> Tuple[str, Optional[Rounds]]:
         """``nbytes`` is always the GLOBAL vector size the cost model is
-        written in terms of (callers of allgather pass shard * P)."""
+        written in terms of (callers of allgather pass shard * P).
+        ``axis`` (a mesh axis name, or a tuple for a folded logical
+        axis) resolves the axis-local fabric on a heterogeneous
+        topology."""
+        fab = self.topology.for_axis(axis)
         if algorithm == "auto":
-            d = self.select(op, nbytes, p)
+            d = self.select(op, nbytes, p, fabric=fab)
             return d.algorithm, d.rounds
         if algorithm in ("autogen", "autogen_pipelined"):
             b = self._tree_elements(op, self._elements(nbytes), p)
-            return algorithm, self.tree_rounds(p, b)
+            return algorithm, self.tree_rounds(p, b, fabric=fab)
         return algorithm, None
 
     def reduce_inside(self, x: jax.Array, axis: str,
@@ -442,7 +642,7 @@ class CollectiveEngine:
         if p == 1:
             return x
         algorithm, rounds = self._resolve("reduce", x.size * x.dtype.itemsize,
-                                          p, algorithm)
+                                          p, algorithm, axis)
         if algorithm == "chain":
             return impl.chain_reduce(x, axis)
         if algorithm == "tree":
@@ -467,7 +667,7 @@ class CollectiveEngine:
         if p == 1:
             return x
         algorithm, rounds = self._resolve(
-            "allreduce", x.size * x.dtype.itemsize, p, algorithm)
+            "allreduce", x.size * x.dtype.itemsize, p, algorithm, axis)
         if algorithm == "ring":
             flat = x.reshape(-1)
             return impl.ring_allreduce(flat, axis).reshape(x.shape)
@@ -484,7 +684,8 @@ class CollectiveEngine:
             return x
         if algorithm != "psum_scatter":
             algorithm, rounds = self._resolve(
-                "reduce_scatter", x.size * x.dtype.itemsize, p, algorithm)
+                "reduce_scatter", x.size * x.dtype.itemsize, p, algorithm,
+                axis)
         if algorithm == "psum_scatter":
             return lax.psum_scatter(x, axis, scatter_dimension=0,
                                     tiled=True)
@@ -505,7 +706,8 @@ class CollectiveEngine:
             # x is the local shard; the cost model prices the global
             # gather, so scale by P
             algorithm, rounds = self._resolve(
-                "allgather", x.size * x.dtype.itemsize * p, p, algorithm)
+                "allgather", x.size * x.dtype.itemsize * p, p, algorithm,
+                axis)
         if algorithm == "all_gather":
             return lax.all_gather(x, axis, tiled=True)
         if algorithm == "ring":
@@ -522,7 +724,7 @@ class CollectiveEngine:
         if p == 1:
             return x
         algorithm, rounds = self._resolve(
-            "broadcast", x.size * x.dtype.itemsize, p, algorithm)
+            "broadcast", x.size * x.dtype.itemsize, p, algorithm, axis)
         if algorithm == "doubling":
             return impl.broadcast(x, axis, root=root)
         if algorithm == "chain":
@@ -722,4 +924,6 @@ class CollectiveEngine:
 
 
 __all__ = ["CollectiveEngine", "Decision", "fit_fabric",
-           "measure_ppermute", "ICI_ELEMENT_BYTES"]
+           "measure_ppermute", "load_topology", "topology_to_dict",
+           "topology_from_dict", "fabric_to_dict", "SCHEMA_VERSION",
+           "ICI_ELEMENT_BYTES"]

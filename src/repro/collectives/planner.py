@@ -48,7 +48,7 @@ import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import patterns as pat
-from repro.core.model import Fabric, ceil_div
+from repro.core.model import Fabric, ceil_div, slowest_fabric
 from repro.core.selector import t_broadcast_2d_fabric
 
 #: shapes a multi-axis allreduce plan may take
@@ -57,8 +57,40 @@ ALLREDUCE_SHAPES = ("sequential", "hierarchical", "2d_xy", "2d_snake",
 #: shapes a multi-axis reduce_scatter / allgather plan may take
 SHARDED_SHAPES = ("cascade", "flat")
 
-#: the engine's select() viewed from the planner: (op, nbytes, p, topo)
+#: the engine's select() viewed from the planner:
+#: (op, nbytes, p, topo=None, fabric=None) -- ``fabric`` carries the
+#: axis-local constants of the axis the candidate actually traverses
 SelectFn = Callable[..., Any]
+
+AxisFabrics = Tuple[Fabric, ...]
+
+
+def _axis_fabrics(sizes: Sequence[int], fabric: Fabric,
+                  axis_fabrics: Optional[Sequence[Optional[Fabric]]]
+                  ) -> AxisFabrics:
+    """Positional per-axis fabrics, defaulting every axis to ``fabric``
+    (the uniform fast path hands back the same object everywhere)."""
+    if axis_fabrics is None:
+        return tuple(fabric for _ in sizes)
+    if len(axis_fabrics) != len(sizes):
+        raise ValueError(f"axis_fabrics {len(axis_fabrics)} entries for "
+                         f"{len(sizes)} axes")
+    return tuple(f if f is not None else fabric for f in axis_fabrics)
+
+
+def _lb_fabric(fabrics: Sequence[Fabric]) -> Fabric:
+    """A fabric no slower than any of ``fabrics`` on every constant, so
+    Lemma 7.2 instantiated with it lower-bounds every candidate priced
+    with the real per-axis constants.  Uniform input returns the shared
+    object (bit-for-bit the single-fabric bound)."""
+    f0 = fabrics[0]
+    if all(f == f0 for f in fabrics[1:]):
+        return f0
+    return Fabric(name="lb",
+                  t_r=min(f.t_r for f in fabrics),
+                  store_cost=min(f.store_cost for f in fabrics),
+                  link_bw=max(f.link_bw for f in fabrics),
+                  multicast=any(f.multicast for f in fabrics))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,7 +176,9 @@ def _fold_2d(sizes: Sequence[int]) -> Tuple[int, int]:
 
 
 def lower_bound_multi(op: str, sizes: Sequence[int], nbytes: int,
-                      fabric: Fabric, element_bytes: int) -> float:
+                      fabric: Fabric, element_bytes: int,
+                      axis_fabrics: Optional[Sequence[Fabric]] = None
+                      ) -> float:
     """Lemma 7.2 instantiated for the folded topology and the op's
     minimal per-device volume.
 
@@ -154,16 +188,21 @@ def lower_bound_multi(op: str, sizes: Sequence[int], nbytes: int,
     allgather only guarantees that every device moves ``B * (P-1)/P``
     elements with no reduce-to-root path, so the bound degenerates to
     the volume branch -- ``t_lower_bound_2d`` on a 1 x 1 grid at that
-    volume."""
+    volume.  On a heterogeneous topology the bound is instantiated with
+    constants no slower than any effective axis's, so it stays below
+    every per-axis-priced candidate."""
+    fabs = _axis_fabrics(tuple(sizes), fabric, axis_fabrics)
     m, n = _fold_2d(sizes)
     if m * n <= 1:
         return 0.0
+    eff_fabs = [fabs[i] for i, _ in _effective(sizes)]
+    lbf = _lb_fabric(eff_fabs or [fabric])
     b = _elements(nbytes, element_bytes)
     if op in ("reduce_scatter", "allgather"):
         p = m * n
         b = max(1, math.ceil(b * (p - 1) / p))
-        return pat.t_lower_bound_2d(1, 1, b, fabric)
-    return pat.t_lower_bound_2d(m, n, b, fabric)
+        return pat.t_lower_bound_2d(1, 1, b, lbf)
+    return pat.t_lower_bound_2d(m, n, b, lbf)
 
 
 def _best_reduce_pattern(p: int, b: int, fabric: Fabric
@@ -191,9 +230,10 @@ def _merge_bytes(into: Dict[int, float], frm: Dict[int, float]) -> None:
 # shape scoring
 # ---------------------------------------------------------------------- #
 def _score_sequential(op_steps_kind: str, sizes: Sequence[int],
-                      nbytes: int, select: SelectFn
+                      nbytes: int, select: SelectFn, fabs: AxisFabrics
                       ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
-    """Per-axis allreduce, innermost first (the legacy loop)."""
+    """Per-axis allreduce, innermost first (the legacy loop); each axis
+    priced with its own fabric constants."""
     t = 0.0
     steps: List[PlanStep] = []
     axis_bytes: Dict[int, float] = {}
@@ -201,7 +241,7 @@ def _score_sequential(op_steps_kind: str, sizes: Sequence[int],
         p = sizes[i]
         if p <= 1:
             continue
-        d = select("allreduce", nbytes, p)
+        d = select("allreduce", nbytes, p, fabric=fabs[i])
         t += d.predicted
         steps.append(PlanStep("allreduce", (i,), d.algorithm, nbytes))
         axis_bytes[i] = _wire_bytes(nbytes, p, allreduce=True)
@@ -209,7 +249,7 @@ def _score_sequential(op_steps_kind: str, sizes: Sequence[int],
 
 
 def _score_cascade(op: str, sizes: Sequence[int], nbytes: int,
-                   select: SelectFn
+                   select: SelectFn, fabs: AxisFabrics
                    ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
     """Per-axis reduce_scatter (innermost first) or allgather (outermost
     first); each phase shrinks/grows the live vector by its axis size."""
@@ -232,7 +272,7 @@ def _score_cascade(op: str, sizes: Sequence[int], nbytes: int,
             nbytes = ceil_div(nbytes, p)
         else:
             phase_bytes = entry[i]
-        d = select(op, phase_bytes, p)
+        d = select(op, phase_bytes, p, fabric=fabs[i])
         t += d.predicted
         steps.append(PlanStep(op, (i,), d.algorithm, phase_bytes))
         axis_bytes[i] = _wire_bytes(phase_bytes, p)
@@ -240,15 +280,20 @@ def _score_cascade(op: str, sizes: Sequence[int], nbytes: int,
 
 
 def _score_flat(op: str, sizes: Sequence[int], nbytes: int,
-                select: SelectFn
+                select: SelectFn, fabs: AxisFabrics
                 ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
     """Best 1D algorithm over the row-major-folded logical axis.  The
     decision is cached under the full topology signature, not the folded
-    P, so a 16-way axis and a folded 2x8 never share entries."""
+    P, so a 16-way axis and a folded 2x8 never share entries.  The
+    folded schedule may route any hop over any member axis, so it is
+    priced with the slowest member fabric (conservative, and exactly
+    why flat loses to hierarchical when pod links are slow)."""
     p = 1
     for s in sizes:
         p *= s
-    d = select(op, nbytes, p, topo=tuple(sizes))
+    eff_fabs = [fabs[i] for i, _ in _effective(sizes)]
+    slow = slowest_fabric(*(eff_fabs or [fabs[0]]))
+    d = select(op, nbytes, p, topo=tuple(sizes), fabric=slow)
     kind = op if op != "allreduce" else "allreduce"
     steps = [PlanStep(kind, tuple(range(len(sizes))), d.algorithm, nbytes)]
     # conservative attribution: the folded schedule may route any hop
@@ -260,21 +305,27 @@ def _score_flat(op: str, sizes: Sequence[int], nbytes: int,
 
 def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
                     element_bytes: int, select: SelectFn,
-                    force_shape: Optional[str] = None) -> Dict[str, Any]:
+                    force_shape: Optional[str] = None,
+                    axis_fabrics: Optional[Sequence[Fabric]] = None
+                    ) -> Dict[str, Any]:
     b = _elements(nbytes, element_bytes)
     eff = _effective(sizes)
+    fabs = _axis_fabrics(sizes, fabric, axis_fabrics)
     shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
 
-    t, steps, ab = _score_sequential("allreduce", sizes, nbytes, select)
+    t, steps, ab = _score_sequential("allreduce", sizes, nbytes, select,
+                                     fabs)
     shapes["sequential"] = (t, steps, ab)
 
     if len(eff) >= 2:
-        shapes["flat"] = _score_flat("allreduce", sizes, nbytes, select)
+        shapes["flat"] = _score_flat("allreduce", sizes, nbytes, select,
+                                     fabs)
 
         # hierarchical: RS(inner) -> AR(outer, 1/P_inner bytes) -> AG(inner)
         inner_i, inner_p = eff[-1]
-        rs = select("reduce_scatter", nbytes, inner_p)
-        ag = select("allgather", nbytes, inner_p)
+        rs = select("reduce_scatter", nbytes, inner_p,
+                    fabric=fabs[inner_i])
+        ag = select("allgather", nbytes, inner_p, fabric=fabs[inner_i])
         shard_nbytes = ceil_div(nbytes, inner_p)
         outer = [(i, p) for i, p in eff[:-1]]
         h_steps = [PlanStep("reduce_scatter", (inner_i,), rs.algorithm,
@@ -283,7 +334,7 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
             inner_i: _wire_bytes(nbytes, inner_p) * 2.0}
         if len(outer) == 1:
             oi, op_ = outer[0]
-            ar = select("allreduce", shard_nbytes, op_)
+            ar = select("allreduce", shard_nbytes, op_, fabric=fabs[oi])
             h_steps.append(PlanStep("allreduce", (oi,), ar.algorithm,
                                     shard_nbytes))
             t_mid = ar.predicted
@@ -292,7 +343,8 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
             sub_sizes = tuple(sizes[i] if (i, sizes[i]) in outer else 1
                               for i in range(len(sizes)))
             sub = _plan_allreduce(sub_sizes, shard_nbytes, fabric,
-                                  element_bytes, select)
+                                  element_bytes, select,
+                                  axis_fabrics=fabs)
             h_steps.append(PlanStep("allreduce",
                                     tuple(i for i, _ in outer),
                                     sub["shape"], shard_nbytes))
@@ -308,9 +360,11 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
 
     if len(eff) == 2:
         (mi, m), (ni, n) = eff
-        bc = t_broadcast_2d_fabric(m, n, b, fabric)
-        pm, tm = _best_reduce_pattern(m, b, fabric)
-        pn, tn = _best_reduce_pattern(n, b, fabric)
+        fm, fn_ = fabs[mi], fabs[ni]
+        bc = t_broadcast_2d_fabric(m, n, b, fabric, fabric_m=fm,
+                                   fabric_n=fn_)
+        pm, tm = _best_reduce_pattern(m, b, fm)
+        pn, tn = _best_reduce_pattern(n, b, fn_)
         xy_bytes = {mi: _wire_bytes(nbytes, m) * 2.0,
                     ni: _wire_bytes(nbytes, n) * 2.0}
         shapes["2d_xy"] = (
@@ -319,37 +373,45 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
             xy_bytes)
         snake_bytes = {mi: _wire_bytes(nbytes, m) * 2.0,
                        ni: _wire_bytes(nbytes, n) * 2.0}
+        # one boustrophedon chain crosses both link classes
+        snake_fab = slowest_fabric(fm, fn_)
         shapes["2d_snake"] = (
-            pat.t_snake_reduce(m, n, b, fabric) + bc,
+            pat.t_snake_reduce(m, n, b, snake_fab) + bc,
             [PlanStep("snake_allreduce", (mi, ni), "snake", nbytes)],
             snake_bytes)
 
     return _finish("allreduce", sizes, nbytes, fabric, element_bytes,
-                   shapes, force_shape)
+                   shapes, force_shape, fabs)
 
 
 def _plan_sharded(op: str, sizes: Tuple[int, ...], nbytes: int,
                   fabric: Fabric, element_bytes: int, select: SelectFn,
-                  force_shape: Optional[str] = None) -> Dict[str, Any]:
+                  force_shape: Optional[str] = None,
+                  axis_fabrics: Optional[Sequence[Fabric]] = None
+                  ) -> Dict[str, Any]:
     eff = _effective(sizes)
+    fabs = _axis_fabrics(sizes, fabric, axis_fabrics)
     shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
-    shapes["cascade"] = _score_cascade(op, sizes, nbytes, select)
+    shapes["cascade"] = _score_cascade(op, sizes, nbytes, select, fabs)
     if len(eff) >= 2:
-        shapes["flat"] = _score_flat(op, sizes, nbytes, select)
+        shapes["flat"] = _score_flat(op, sizes, nbytes, select, fabs)
     return _finish(op, sizes, nbytes, fabric, element_bytes, shapes,
-                   force_shape)
+                   force_shape, fabs)
 
 
 def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
             element_bytes: int,
             shapes: Dict[str, Tuple[float, List[PlanStep],
                                     Dict[int, float]]],
-            force_shape: Optional[str] = None) -> Dict[str, Any]:
+            force_shape: Optional[str] = None,
+            axis_fabrics: Optional[Sequence[Fabric]] = None
+            ) -> Dict[str, Any]:
     if not any(p > 1 for p in sizes):
         return {"op": op, "sizes": list(sizes), "nbytes": nbytes,
                 "shape": "identity", "steps": [], "predicted": 0.0,
                 "predictions": {}, "cost_terms": {}, "lower_bound": 0.0}
-    lb = lower_bound_multi(op, sizes, nbytes, fabric, element_bytes)
+    lb = lower_bound_multi(op, sizes, nbytes, fabric, element_bytes,
+                           axis_fabrics)
     predictions = {name: t for name, (t, _, _) in shapes.items()}
     for name, t in predictions.items():
         if t < lb - 1e-6:
@@ -385,22 +447,28 @@ def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
 def plan_collective(op: str, sizes: Sequence[int], nbytes: int,
                     fabric: Fabric, element_bytes: int,
                     select: SelectFn,
-                    force_shape: Optional[str] = None) -> Dict[str, Any]:
+                    force_shape: Optional[str] = None,
+                    axis_fabrics: Optional[Sequence[Fabric]] = None
+                    ) -> Dict[str, Any]:
     """Produce the positional (unbound) plan record for a topology.
 
-    ``select(op, nbytes, p, topo=None)`` prices one per-axis candidate;
-    the engine passes its cached ``Decision``-returning ``select`` so
-    every per-axis sub-decision lands in the persistent cache.
+    ``select(op, nbytes, p, topo=None, fabric=None)`` prices one
+    per-axis candidate with that axis's constants; the engine passes its
+    cached ``Decision``-returning ``select`` so every per-axis
+    sub-decision lands in the persistent cache.  ``axis_fabrics`` gives
+    each positional axis its own :class:`Fabric` (heterogeneous
+    topology); ``None`` prices every axis with ``fabric`` -- the
+    uniform fast path, bit-for-bit the single-fabric planner.
     ``force_shape`` overrides the argmin with a named candidate (still
     scored and lower-bound-validated alongside the others).
     """
     sizes = tuple(int(s) for s in sizes)
     if op == "allreduce":
         return _plan_allreduce(sizes, nbytes, fabric, element_bytes,
-                               select, force_shape)
+                               select, force_shape, axis_fabrics)
     if op in ("reduce_scatter", "allgather"):
         return _plan_sharded(op, sizes, nbytes, fabric, element_bytes,
-                             select, force_shape)
+                             select, force_shape, axis_fabrics)
     raise ValueError(f"no multi-axis planner for op {op!r}")
 
 

@@ -150,7 +150,8 @@ def t_autogen(p: int, b: int, fabric: Fabric = WSE2,
     ds = np.array([d for d, _ in tables.pairs], dtype=np.float64)
     cs = np.array([c for _, c in tables.pairs], dtype=np.float64)
     e = tables.energy[:, p].astype(np.float64)
-    t = (np.maximum(cs * b, b * e / (p - 1) + (p - 1))
+    bw = fabric.link_bw
+    t = (np.maximum(cs * b / bw, b * e / ((p - 1) * bw) + (p - 1))
          + ds * fabric.per_depth_cost)
     t = np.where(np.isfinite(e), t, np.inf)
     k = int(np.argmin(t))

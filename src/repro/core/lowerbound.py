@@ -65,7 +65,8 @@ def t_lower_bound(p: int, b: int, fabric: Fabric = WSE2,
     d_max = lb_table.shape[0] - 1
     ds = np.arange(1, d_max + 1, dtype=np.float64)
     e = lb_table[1:, p].astype(np.float64)
-    t = b * e / (p - 1) + (p - 1) + ds * fabric.per_depth_cost
+    t = (b * e / ((p - 1) * fabric.link_bw) + (p - 1)
+         + ds * fabric.per_depth_cost)
     t = np.where(np.isfinite(e), t, np.inf)
     return float(t.min())
 

@@ -40,7 +40,7 @@ def t_star(p: int, b: int, fabric: Fabric = WSE2, refined: bool = True) -> float
     if p == 1:
         return 0.0
     if refined:
-        return b * (p - 1) + 2 * fabric.t_r + fabric.store_cost
+        return b * (p - 1) / fabric.link_bw + 2 * fabric.t_r + fabric.store_cost
     terms = CostTerms(depth=1, distance=p - 1,
                       energy=b * p * (p - 1) / 2.0,
                       contention=b * (p - 1), links=p - 1, label="star")
@@ -51,7 +51,7 @@ def t_chain(p: int, b: int, fabric: Fabric = WSE2) -> float:
     """Chain Reduce (Lemma 5.2): T = B + (2*T_R + 2)(P - 1)."""
     if p == 1:
         return 0.0
-    return b + fabric.hop_pipeline_cost * (p - 1)
+    return b / fabric.link_bw + fabric.hop_pipeline_cost * (p - 1)
 
 
 def t_tree(p: int, b: int, fabric: Fabric = WSE2) -> float:
@@ -59,8 +59,9 @@ def t_tree(p: int, b: int, fabric: Fabric = WSE2) -> float:
     if p == 1:
         return 0.0
     lg = log2i(p)
-    bandwidth = b * p / (2.0 * (p - 1)) * lg + (p - 1)
-    return max(b * lg, bandwidth) + fabric.per_depth_cost * lg
+    bw = fabric.link_bw
+    bandwidth = b * p / (2.0 * (p - 1)) * lg / bw + (p - 1)
+    return max(b * lg / bw, bandwidth) + fabric.per_depth_cost * lg
 
 
 def t_two_phase(p: int, b: int, fabric: Fabric = WSE2,
@@ -124,8 +125,10 @@ def t_ring_allreduce(p: int, b: int, fabric: Fabric = WSE2) -> float:
     T = 2(P-1)B/P + 4P - 6 + 2(P-1)(2*T_R + 1)."""
     if p == 1:
         return 0.0
-    contention = 2.0 * (p - 1) * b / p
-    bandwidth = 2.0 * (p - 1) * b / p  # E/N with E = 2(P-1) rounds * links
+    bw = fabric.link_bw
+    contention = 2.0 * (p - 1) * b / p / bw
+    # E/N with E = 2(P-1) rounds * links
+    bandwidth = 2.0 * (p - 1) * b / p / bw
     distance = 2.0 * (2 * p - 3)
     depth = 2.0 * (p - 1)
     return (max(contention, bandwidth + distance)
@@ -145,7 +148,7 @@ def t_ring_reduce_scatter(p: int, b: int, fabric: Fabric = WSE2) -> float:
     """One ring half: P-1 rounds of B/P-element sends around the row."""
     if p == 1:
         return 0.0
-    moved = (p - 1) * b / p
+    moved = (p - 1) * b / p / fabric.link_bw
     distance = float(2 * p - 3)
     return moved + distance + fabric.per_depth_cost * (p - 1)
 
@@ -162,7 +165,7 @@ def t_doubling_allgather(p: int, b: int, fabric: Fabric = WSE2) -> float:
     if p == 1:
         return 0.0
     lg = math.ceil(math.log2(p))
-    return b * (p - 1) / p + fabric.per_depth_cost * lg
+    return b * (p - 1) / p / fabric.link_bw + fabric.per_depth_cost * lg
 
 
 def t_doubling_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
@@ -171,14 +174,14 @@ def t_doubling_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
     if p == 1:
         return 0.0
     lg = math.ceil(math.log2(p))
-    return lg * b + fabric.per_depth_cost * lg
+    return lg * b / fabric.link_bw + fabric.per_depth_cost * lg
 
 
 def t_chain_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
     """Unpipelined hop-by-hop relay: P-1 serialized B-element sends."""
     if p == 1:
         return 0.0
-    return (p - 1) * (b + fabric.per_depth_cost)
+    return (p - 1) * (b / fabric.link_bw + fabric.per_depth_cost)
 
 
 REDUCE_SCATTER_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
@@ -209,21 +212,32 @@ def t_broadcast_2d(m: int, n: int, b: int, fabric: Fabric = WSE2) -> float:
 
 
 def t_xy_reduce(pattern: str, m: int, n: int, b: int,
-                fabric: Fabric = WSE2) -> float:
-    """X-Y Reduce (Sec. 7.2): 1D reduce along rows, then along column 0."""
+                fabric: Fabric = WSE2,
+                fabric_m: Optional[Fabric] = None,
+                fabric_n: Optional[Fabric] = None) -> float:
+    """X-Y Reduce (Sec. 7.2): 1D reduce along rows, then along column 0.
+
+    ``fabric_m`` / ``fabric_n`` price each grid dimension with its own
+    (axis-local) constants on a heterogeneous topology; both default to
+    ``fabric``."""
     fn = REDUCE_PATTERNS[pattern]
-    return fn(n, b, fabric) + fn(m, b, fabric)
+    return (fn(n, b, fabric_n or fabric) + fn(m, b, fabric_m or fabric))
 
 
 def t_snake_reduce(m: int, n: int, b: int, fabric: Fabric = WSE2) -> float:
-    """Snake Reduce (Sec. 7.3): chain over all M*N PEs, unit hops."""
+    """Snake Reduce (Sec. 7.3): chain over all M*N PEs, unit hops.  On a
+    heterogeneous grid pass the slowest of the two axis fabrics -- the
+    one chain crosses both link classes."""
     return t_chain(m * n, b, fabric)
 
 
 def t_xy_allreduce(pattern: str, m: int, n: int, b: int,
-                   fabric: Fabric = WSE2) -> float:
+                   fabric: Fabric = WSE2,
+                   fabric_m: Optional[Fabric] = None,
+                   fabric_n: Optional[Fabric] = None) -> float:
     """AllReduce on x then y (Sec. 7.4, first variant)."""
-    return t_allreduce(pattern, n, b, fabric) + t_allreduce(pattern, m, b, fabric)
+    return (t_allreduce(pattern, n, b, fabric_n or fabric)
+            + t_allreduce(pattern, m, b, fabric_m or fabric))
 
 
 def t_reduce_bcast_2d(pattern: str, m: int, n: int, b: int,
@@ -237,8 +251,12 @@ def t_reduce_bcast_2d(pattern: str, m: int, n: int, b: int,
 
 
 def t_lower_bound_2d(m: int, n: int, b: int, fabric: Fabric = WSE2) -> float:
-    """Lemma 7.2: T >= max(B, B/8 + M + N - 1) + 2*T_R + 1."""
-    return (max(float(b), b / 8.0 + m + n - 1)
+    """Lemma 7.2: T >= max(B, B/8 + M + N - 1) + 2*T_R + 1.
+
+    On a heterogeneous grid instantiate with a fabric no slower than any
+    axis's (max link_bw, min latency) so the bound stays a bound."""
+    bw = fabric.link_bw
+    return (max(float(b) / bw, b / 8.0 / bw + m + n - 1)
             + fabric.per_depth_cost * 1.0)
 
 

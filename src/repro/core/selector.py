@@ -16,7 +16,7 @@ import numpy as np
 from repro.core import patterns as pat
 from repro.core.autogen import AutoGenTables, compute_tables, t_autogen
 from repro.core.lowerbound import compute_lb_energy, t_lower_bound
-from repro.core.model import Fabric, WSE2
+from repro.core.model import Fabric, WSE2, slowest_fabric
 
 
 @dataclasses.dataclass
@@ -160,29 +160,51 @@ def heatmap_1d_allreduce(b_values: Sequence[int], p_values: Sequence[int],
 
 
 def t_broadcast_2d_fabric(m: int, n: int, b: int,
-                          fabric: Fabric = WSE2) -> float:
+                          fabric: Fabric = WSE2,
+                          fabric_m: Optional[Fabric] = None,
+                          fabric_n: Optional[Fabric] = None) -> float:
     """2D broadcast honoring the fabric: flooding multicast on the WSE
     (Lemma 7.1), per-axis log-depth doubling where multicast is missing
-    (ICI) -- what the 2D shard_map implementation actually executes."""
-    if fabric.multicast:
-        return pat.t_broadcast_2d(m, n, b, fabric)
-    return (pat.t_doubling_broadcast(m, b, fabric)
-            + pat.t_doubling_broadcast(n, b, fabric))
+    (ICI) -- what the 2D shard_map implementation actually executes.
+
+    ``fabric_m`` / ``fabric_n`` price each grid dimension with its own
+    axis-local constants; the flooding form (one stream crossing both
+    dimensions) conservatively takes the slower of the two."""
+    fm = fabric_m or fabric
+    fn_ = fabric_n or fabric
+    if fm == fn_:
+        if fm.multicast:
+            return pat.t_broadcast_2d(m, n, b, fm)
+        return (pat.t_doubling_broadcast(m, b, fm)
+                + pat.t_doubling_broadcast(n, b, fm))
+    if fm.multicast and fn_.multicast:
+        return pat.t_broadcast_2d(m, n, b, slowest_fabric(fm, fn_))
+    return (pat.t_doubling_broadcast(m, b, fm)
+            + pat.t_doubling_broadcast(n, b, fn_))
 
 
-def predict_allreduce_2d(m: int, n: int, b: int, fabric: Fabric = WSE2
+def predict_allreduce_2d(m: int, n: int, b: int, fabric: Fabric = WSE2,
+                         fabric_m: Optional[Fabric] = None,
+                         fabric_n: Optional[Fabric] = None
                          ) -> Dict[str, float]:
     """2D AllReduce candidates over an M x N grid (Sec. 7.4): every X-Y
     pattern plus the snake, each composed with the fabric-appropriate
     2D broadcast.  The seam the topology planner and the Fig. 10
-    heatmap share."""
-    bc = t_broadcast_2d_fabric(m, n, b, fabric)
+    heatmap share.  Per-axis constants (``fabric_m``/``fabric_n``)
+    price each grid dimension with its own fabric; the snake chain --
+    which crosses both link classes -- takes the slower of the two."""
+    fm = fabric_m or fabric
+    fn_ = fabric_n or fabric
+    bc = t_broadcast_2d_fabric(m, n, b, fabric, fabric_m=fm, fabric_n=fn_)
     preds: Dict[str, float] = {}
     for name in ("star", "chain", "tree", "two_phase"):
         if name == "tree" and ((m & (m - 1)) != 0 or (n & (n - 1)) != 0):
             continue
-        preds[f"xy_{name}"] = pat.t_xy_reduce(name, m, n, b, fabric) + bc
-    preds["snake"] = pat.t_snake_reduce(m, n, b, fabric) + bc
+        preds[f"xy_{name}"] = pat.t_xy_reduce(name, m, n, b, fabric,
+                                              fabric_m=fm,
+                                              fabric_n=fn_) + bc
+    preds["snake"] = pat.t_snake_reduce(m, n, b,
+                                        slowest_fabric(fm, fn_)) + bc
     return preds
 
 

@@ -52,11 +52,33 @@ def build_batch(cfg, data_batch, key):
     return batch
 
 
+def install_fabric_topology(spec: str):
+    """Parse a ``--fabric`` spec (``pod=slow,data=fast`` or a JSON
+    path) and install an engine with those per-axis constants as the
+    process default, so every engine-routed collective -- grad sync,
+    serve -- is planned against the declared link speeds."""
+    from repro.core.model import TPU_V5E_AXIS, parse_fabric_topology
+    from repro.collectives.api import set_engine
+    from repro.collectives.engine import CollectiveEngine
+
+    topo = parse_fabric_topology(spec)
+    engine = CollectiveEngine(fabric=topo)
+    set_engine(engine)
+    # call sites ask for the stock default fabric; pin the topology
+    # engine under that key too, or a spec that overrides `default`
+    # would print its topology and then never price anything
+    set_engine(engine, fabric=TPU_V5E_AXIS)
+    return topo
+
+
 def run(arch: str, steps: int, batch_size: int, seq_len: int,
         reduced: bool = True, ckpt_dir: str | None = None,
         ckpt_every: int = 50, lr: float = 3e-4, microbatches: int = 1,
         log_every: int = 10, resume: bool = True, dp: bool = False,
-        grad_sync_mode: str = "allreduce"):
+        grad_sync_mode: str = "allreduce", fabric_spec: str | None = None):
+    if fabric_spec:
+        topo = install_fabric_topology(fabric_spec)
+        print(f"[train] fabric topology: {topo.describe()}")
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -165,11 +187,17 @@ def main():
                     default="allreduce",
                     help="engine sync shape under --dp: bucketed "
                          "allreduce or the FSDP RS/AG pair")
+    ap.add_argument("--fabric", default=None, metavar="SPEC",
+                    help="heterogeneous fabric topology: "
+                         "'pod=slow,data=fast' (presets or link_bw "
+                         "multipliers) or a path to a JSON topology "
+                         "file; the planner prices each mesh axis "
+                         "with its declared link constants")
     args = ap.parse_args()
     run(args.arch, args.steps, args.batch, args.seq, reduced=args.reduced,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
         microbatches=args.microbatches, dp=args.dp,
-        grad_sync_mode=args.grad_sync)
+        grad_sync_mode=args.grad_sync, fabric_spec=args.fabric)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ accumulator must equal the exact sum of all PE vectors.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -106,7 +107,10 @@ def simulate_reduce_fabric(tree: ReduceTree, b: int,
     """Cycle-level simulation of a 1D reduce tree (ids on a row; all edges
     towards lower ids / westward)."""
     p = tree.num_pes
-    t_r = int(fabric.t_r)
+    # keep t_r exact: calibrated fabrics carry non-integer ramp
+    # latencies, and truncating silently mis-simulated them -- a ramp
+    # exit is simply not ready until the first integer cycle >= t_r out
+    t_r = float(fabric.t_r)
     if data is None:
         data = np.random.default_rng(0).standard_normal((p, b))
     expected = data.sum(axis=0)
@@ -219,10 +223,11 @@ def simulate_broadcast_fabric(p: int, b: int, fabric: Fabric = WSE2
                               ) -> FabricResult:
     """Flooding broadcast from PE 0 eastward with free router multicast:
     element m leaves PE 0 at cycle m; completion when the farthest PE
-    stored the last element.  Deterministic closed pipeline."""
-    t_r = int(fabric.t_r)
+    stored the last element.  Deterministic closed pipeline.  Fractional
+    (calibrated) ramp latencies round up to the completing cycle."""
+    t_r = float(fabric.t_r)
     last = (b - 1) + t_r + (p - 1) + t_r + 1
-    return FabricResult(int(last), np.arange(b, dtype=np.float64))
+    return FabricResult(int(math.ceil(last)), np.arange(b, dtype=np.float64))
 
 
 __all__ = ["simulate_reduce_fabric", "simulate_broadcast_fabric",

@@ -44,9 +44,11 @@ class GradSyncConfig:
     shard), the AdamW update runs on the shard against flat sharded
     optimizer state, and the updated params are allgathered -- with
     both halves routed through the engine's topology-aware plans
-    instead of GSPMD's sharding-implied defaults.  ``compress`` is an
-    allreduce-mode knob and is ignored here; ``algorithm`` picks the
-    plan shape for all three phases ("auto" = planner argmin)."""
+    instead of GSPMD's sharding-implied defaults.  ``master_weights``
+    is supported: the fp32 master lives as one flat sharded vector
+    updated in place.  ``compress`` is an allreduce-mode knob and is
+    ignored here; ``algorithm`` picks the plan shape for all three
+    phases ("auto" = planner argmin)."""
 
     mesh: Mesh
     axes: Tuple[str, ...] = ("data",)
@@ -98,8 +100,12 @@ def fsdp_sync_apply(opt_cfg: AdamWConfig, params, grads, opt,
     fp32 accumulation throughout), but the optimizer state lives as
     flat 1/P shards: ``opt.mu``/``opt.nu`` become single flat vectors,
     padded to a multiple of the folded DP size and sharded over
-    ``gs.axes``.  A tree-shaped state (step 0, or a restored
-    allreduce-mode checkpoint) is flattened in place.
+    ``gs.axes``.  With ``master_weights`` enabled the fp32 master copy
+    lives the same way -- one flat sharded vector updated in place,
+    with only the model-dtype params allgathered -- so bf16 training
+    keeps full-precision state at 1/P memory.  A tree-shaped state
+    (step 0, or a restored allreduce-mode checkpoint) is flattened in
+    place.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -107,9 +113,6 @@ def fsdp_sync_apply(opt_cfg: AdamWConfig, params, grads, opt,
     from repro.collectives.overlap import flatten_tree, unflatten_tree
     from repro.optim.adamw import lr_at
 
-    if opt.master is not None:
-        raise NotImplementedError("fsdp grad-sync mode does not support "
-                                  "master_weights yet")
     axes = tuple(gs.axes)
     if not axes:
         # no DP axes (single-device run): nothing to scatter/gather
@@ -119,6 +122,7 @@ def fsdp_sync_apply(opt_cfg: AdamWConfig, params, grads, opt,
     n_world = 1
     for s in sizes:
         n_world *= s
+    use_master = opt.master is not None
 
     flat_g, _ = flatten_tree(grads)
     flat_p, meta = flatten_tree(params)
@@ -132,16 +136,27 @@ def fsdp_sync_apply(opt_cfg: AdamWConfig, params, grads, opt,
         flat_g, flat_p, decay = (jnp.concatenate([a, z])
                                  for a in (flat_g, flat_p, decay))
 
-    mu, nu = opt.mu, opt.nu
-    mu_leaves = jax.tree.leaves(mu)
-    flat_state = (len(mu_leaves) == 1 and mu_leaves[0].ndim == 1
-                  and mu_leaves[0].size == n + pad)
-    if not flat_state:
-        mu, _ = flatten_tree(mu)
-        nu, _ = flatten_tree(nu)
+    def _as_flat(tree):
+        """Flatten a (possibly already-flat) state tree to [n + pad]."""
+        leaves = jax.tree.leaves(tree)
+        if (len(leaves) == 1 and leaves[0].ndim == 1
+                and leaves[0].size == n + pad):
+            return leaves[0]
+        flat, _ = flatten_tree(tree)
         if pad:
-            z = jnp.zeros((pad,), jnp.float32)
-            mu, nu = jnp.concatenate([mu, z]), jnp.concatenate([nu, z])
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+        return flat
+
+    mu, nu = _as_flat(opt.mu), _as_flat(opt.nu)
+    # the fp32 working copy the update runs against: the persistent
+    # master when enabled, else a per-step recast of the params
+    w32 = _as_flat(opt.master) if use_master else flat_p
+    # allgather in the model dtype when the params share one: the full
+    # fp32 master never needs to cross the wire (the gathered values
+    # are cast to the leaf dtypes at unflatten anyway)
+    param_dtypes = {l.dtype for l in jax.tree.leaves(params)}
+    gather_dtype = (param_dtypes.pop() if len(param_dtypes) == 1
+                    else jnp.float32)
 
     count = opt.count + 1
     lr = lr_at(opt_cfg, count)
@@ -161,17 +176,19 @@ def fsdp_sync_apply(opt_cfg: AdamWConfig, params, grads, opt,
         step = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + opt_cfg.eps)
         step = step + opt_cfg.weight_decay * dm * p32
         w2 = p32 - lr * step
-        w_full = engine.allgather_multi(w2, axes,
+        w_full = engine.allgather_multi(w2.astype(gather_dtype), axes,
                                         algorithm=gs.algorithm)
-        return w_full, m2, v2, gnorm.reshape(1)
+        return w_full, m2, v2, w2, gnorm.reshape(1)
 
     spec = P(axes if len(axes) > 1 else axes[0])
     fn = shard_map(shard_fn, mesh=gs.mesh,
                    in_specs=(P(), spec, spec, spec, spec),
-                   out_specs=(P(), spec, spec, P()), check_rep=False)
-    w_full, mu2, nu2, gnorm = fn(flat_g, flat_p, decay, mu, nu)
+                   out_specs=(P(), spec, spec, spec, P()),
+                   check_rep=False)
+    w_full, mu2, nu2, w2, gnorm = fn(flat_g, w32, decay, mu, nu)
     params2 = unflatten_tree(w_full[:n], meta)
-    opt2 = AdamWState(mu=mu2, nu=nu2, count=count, master=None)
+    opt2 = AdamWState(mu=mu2, nu=nu2, count=count,
+                      master=w2 if use_master else None)
     return params2, opt2, {"grad_norm": gnorm[0], "lr": lr}
 
 

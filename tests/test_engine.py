@@ -15,9 +15,10 @@ import sys
 import numpy as np
 import pytest
 
-from repro.collectives.engine import (CollectiveEngine, fit_fabric,
+from repro.collectives.engine import (CollectiveEngine, SCHEMA_VERSION,
+                                      fit_fabric, load_topology,
                                       ICI_ELEMENT_BYTES)
-from repro.core.model import TPU_V5E_AXIS, Fabric
+from repro.core.model import FabricTopology, TPU_V5E_AXIS, Fabric
 
 
 # ------------------------------ decision cache ------------------------ #
@@ -113,6 +114,124 @@ def test_calibration_round_trip(tmp_path):
     # constants
     eng.select("allreduce", 1 << 20, 8)
     assert eng.stats["misses"] == 2
+
+
+def _synthetic_measurements(t_r: float, bw: float, cycle: float = 11.4e-9):
+    """Per-axis ppermute timings for a link with the given constants:
+    seconds = 2*t_r*cycle + B * (cycle / bw)."""
+    return [(nb, 2 * t_r * cycle + max(1, nb // ICI_ELEMENT_BYTES)
+             * cycle / bw)
+            for nb in (1 << 12, 1 << 16, 1 << 20, 1 << 22)]
+
+
+def test_per_axis_calibration_round_trip(tmp_path):
+    """Fit two axes from synthetic timings with different link speeds:
+    the topology recovers both sets of constants on a shared time base
+    (fast axis anchors link_bw=1), and the planner flips the 128 KiB
+    (2, 16) plan from sequential to hierarchical -- the slow cross-pod
+    link is exactly what makes the hierarchy pay."""
+    eng = _engine(tmp_path)
+    before = eng.plan_multi("allreduce", ("pod", "data"), (2, 16),
+                            1 << 17)
+    assert before.shape != "hierarchical"
+
+    topo = eng.calibrate(measurements={
+        "pod": _synthetic_measurements(t_r=300.0, bw=1.0 / 8.0),
+        "data": _synthetic_measurements(t_r=88.0, bw=1.0),
+    })
+    assert isinstance(topo, FabricTopology)
+    assert eng.topology is topo
+    data_f, pod_f = topo.for_axis("data"), topo.for_axis("pod")
+    assert data_f != pod_f
+    assert data_f.t_r == pytest.approx(88.0, rel=1e-6)
+    assert data_f.link_bw == pytest.approx(1.0, rel=1e-6)
+    assert pod_f.t_r == pytest.approx(300.0, rel=1e-6)
+    assert pod_f.link_bw == pytest.approx(1.0 / 8.0, rel=1e-6)
+
+    after = eng.plan_multi("allreduce", ("pod", "data"), (2, 16), 1 << 17)
+    assert after.shape == "hierarchical", after.predictions
+    # and the modeled cross-pod bytes of the winner stay strictly below
+    # the volume-shipping shapes'
+    ab = after.cost_terms
+    assert (ab["hierarchical"]["axis_bytes"]["pod"]
+            < ab["flat"]["axis_bytes"]["pod"])
+
+
+def test_per_axis_calibration_persists_v3_topology(tmp_path):
+    """The v3 cache file records the calibrated per-axis fabrics, and
+    ``load_topology`` restores them for a fresh process."""
+    eng = _engine(tmp_path)
+    topo = eng.calibrate(measurements={
+        "pod": _synthetic_measurements(t_r=300.0, bw=0.25),
+        "data": _synthetic_measurements(t_r=88.0, bw=1.0),
+    })
+    eng.plan_multi("allreduce", ("pod", "data"), (2, 4), 1 << 20)
+    eng.flush()
+    path = str(tmp_path / "decisions.json")
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == SCHEMA_VERSION == 3
+    axes = payload["topology"]["axes"]
+    assert set(axes) == {"pod", "data"}
+    assert axes["pod"]["link_bw"] != axes["data"]["link_bw"]
+
+    restored = load_topology(path)
+    assert restored == topo
+    # an engine rebuilt on the restored topology serves the persisted
+    # plans as hits
+    eng2 = CollectiveEngine(cache_path=path, fabric=restored)
+    eng2.plan_multi("allreduce", ("pod", "data"), (2, 4), 1 << 20)
+    assert eng2.stats["plan_hits"] == 1
+    assert eng2.stats["plan_misses"] == 0
+
+
+def test_per_axis_calibration_rejects_noise_dominated_axis(tmp_path):
+    """A flat-line (or inverted) timing fit has no bandwidth signal;
+    anchoring the shared time base on its clamped slope would hand
+    every axis absurd constants -- calibrate must fail loudly
+    instead, naming the axis, and leave the engine untouched."""
+    eng = _engine(tmp_path)
+    before = eng.topology
+    flat = [(nb, 1e-6) for nb in (1 << 12, 1 << 16, 1 << 20, 1 << 22)]
+    with pytest.raises(ValueError, match="pod"):
+        eng.calibrate(measurements={
+            "pod": flat,
+            "data": _synthetic_measurements(t_r=88.0, bw=1.0)})
+    assert eng.topology is before
+    with pytest.raises(ValueError, match="empty"):
+        eng.calibrate(measurements={})
+
+
+def test_schema_v2_cache_migrates(tmp_path):
+    """A v2 file (schema 2, no topology section, single-fabric tag)
+    loads into the v3 engine without error: a uniform topology's tag
+    equals the v2 tag and the keys are unchanged."""
+    eng = _engine(tmp_path)
+    d = eng.select("allreduce", 1 << 20, 8)
+    eng.plan_multi("allreduce", ("pod", "data"), (2, 8), 1 << 20)
+    eng.flush()
+    path = str(tmp_path / "decisions.json")
+    with open(path) as f:
+        payload = json.load(f)
+    legacy = {"schema": 2, "fabric": payload["fabric"],
+              "decisions": payload["decisions"],
+              "plans": payload["plans"]}
+    with open(path, "w") as f:
+        json.dump(legacy, f)
+
+    eng2 = _engine(tmp_path)
+    d2 = eng2.select("allreduce", 1 << 20, 8)
+    eng2.plan_multi("allreduce", ("pod", "data"), (2, 8), 1 << 20)
+    assert eng2.stats["misses"] == 0, "v2 decisions were not served"
+    assert eng2.stats["plan_misses"] == 0, "v2 plans were not served"
+    assert d2.algorithm == d.algorithm
+    # a file from a newer schema than this build is ignored, not crashed
+    legacy["schema"] = SCHEMA_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(legacy, f)
+    eng3 = _engine(tmp_path)
+    eng3.select("allreduce", 1 << 20, 8)
+    assert eng3.stats["misses"] == 1
 
 
 def test_calibration_shifts_selection(tmp_path):
@@ -268,6 +387,60 @@ results["fsdp_params_match_gspmd"] = all(
                     jax.tree.leaves(state_f.params)))
 results["fsdp_state_is_flat_shards"] = (
     getattr(state_f.opt.mu, "ndim", None) == 1)
+
+# FSDP + fp32 master weights (bf16 params): must track the GSPMD
+# master-weights baseline, with the master living as one flat fp32
+# shard instead of a param-shaped tree
+params_bf = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+fsdp_m_step = make_train_step(cfg, opt, grad_sync=GradSyncConfig(
+    mesh=mesh_h, axes=("pod", "data"), mode="fsdp"))
+state_mref = init_train_state(params_bf, master_weights=True)
+state_mf = init_train_state(params_bf, master_weights=True)
+ref_jit_m = jax.jit(make_train_step(cfg, opt))
+for _ in range(2):
+    state_mref, _ = ref_jit_m(state_mref, batch)
+    with mesh_h:
+        state_mf, _ = jax.jit(fsdp_m_step)(state_mf, sharded_h)
+results["fsdp_master_params_match_gspmd"] = all(
+    np.allclose(np.asarray(a, dtype=np.float32),
+                np.asarray(b, dtype=np.float32), rtol=1e-2, atol=1e-2)
+    for a, b in zip(jax.tree.leaves(state_mref.params),
+                    jax.tree.leaves(state_mf.params)))
+results["fsdp_master_params_stay_bf16"] = all(
+    l.dtype == jnp.bfloat16 for l in jax.tree.leaves(state_mf.params))
+results["fsdp_master_is_flat_fp32_shard"] = (
+    getattr(state_mf.opt.master, "ndim", None) == 1
+    and state_mf.opt.master.dtype == jnp.float32)
+# masters hold fp32 state the bf16 params cannot: the flat master must
+# differ from the recast params (strictly more precision retained)
+flat_masters = np.asarray(state_mf.opt.master)
+results["fsdp_master_keeps_fp32_precision"] = bool(
+    np.any(flat_masters[:64]
+           != np.asarray(jax.tree.leaves(state_mf.params)[0],
+                         dtype=np.float32).reshape(-1)[:64]))
+
+# per-axis calibration on the real (2, 4) debug mesh: one fitted
+# fabric per mesh axis, persisted under the v3 cache schema
+import tempfile
+from repro.collectives.engine import load_topology
+cal_path = tempfile.mktemp(suffix=".json")
+eng_cal = CollectiveEngine(cache_path=cal_path)
+topo = eng_cal.calibrate(mesh=mesh_h,
+                         sizes_bytes=(1 << 12, 1 << 14, 1 << 16, 1 << 18))
+fpod, fdata = topo.for_axis("pod"), topo.for_axis("data")
+results["calibrate_mesh_per_axis_fabrics"] = (
+    len(dict(topo.axis_fabrics)) == 2
+    and (fpod.t_r, fpod.link_bw) != (fdata.t_r, fdata.link_bw)
+    and max(fpod.link_bw, fdata.link_bw) == 1.0)
+eng_cal.select("allreduce", 1 << 20, 8)
+eng_cal.plan_multi("allreduce", ("pod", "data"), (2, 4), 1 << 20)
+eng_cal.flush()
+with open(cal_path) as fh:
+    payload = json.load(fh)
+results["calibrate_v3_persisted"] = (
+    payload["schema"] == 3
+    and set(payload["topology"]["axes"]) == {"pod", "data"})
+results["calibrate_topology_reloads"] = (load_topology(cal_path) == topo)
 
 # engine-backed DP serving: tokens identical to single-device greedy
 from repro.launch.serve import BatchedServer, Request

@@ -9,6 +9,7 @@ jax.lax references lives in the multidev tier
 (tests/test_collectives_multidev.py, tests/test_engine.py).
 """
 
+import dataclasses
 import json
 
 import pytest
@@ -16,12 +17,23 @@ import pytest
 from repro.collectives import planner
 from repro.collectives.engine import (CollectiveEngine, ICI_ELEMENT_BYTES,
                                       SCHEMA_VERSION)
-from repro.core.model import TPU_V5E_AXIS, WSE2
+from repro.core.model import (FabricTopology, TPU_V5E_AXIS, WSE2,
+                              parse_fabric_topology)
 
 
 def _engine(tmp_path, **kw):
     return CollectiveEngine(cache_path=str(tmp_path / "decisions.json"),
                             **kw)
+
+
+def _slow_pod_topology(factor: float = 4.0) -> FabricTopology:
+    """(pod, data) with the pod link ``factor``x slower than data."""
+    slow = dataclasses.replace(TPU_V5E_AXIS,
+                               name=f"{TPU_V5E_AXIS.name}_pod",
+                               link_bw=TPU_V5E_AXIS.link_bw / factor,
+                               t_r=TPU_V5E_AXIS.t_r * factor)
+    return FabricTopology(default=TPU_V5E_AXIS,
+                          axis_fabrics=(("pod", slow),))
 
 
 # --------------------------- plan properties -------------------------- #
@@ -206,6 +218,138 @@ def test_planner_2d_pricing_matches_flow_simulator():
                 uni = compare_allreduce_2d(pattern, m, n, b, WSE2)
                 assert (plan.predictions["2d_xy"]
                         <= uni.model_cycles + 1e-6)
+
+
+# ----------------------- heterogeneous topology ----------------------- #
+def test_asymmetric_topology_selects_hierarchical():
+    """Acceptance: with the pod link >= 4x slower than the data link,
+    the joint argmin is the hierarchical composition at bandwidth-bound
+    bucket sizes, and its modeled cross-pod wire bytes are strictly
+    lower than the flat plan's."""
+    eng = CollectiveEngine(fabric=_slow_pod_topology(4.0), persist=False)
+    for sizes in ((2, 4), (2, 16), (4, 4)):
+        for nbytes in (1 << 20, 4 << 20, 64 << 20):
+            plan = eng.plan_multi("allreduce", ("pod", "data"), sizes,
+                                  nbytes)
+            assert plan.shape == "hierarchical", (sizes, nbytes,
+                                                  plan.predictions)
+            hier = plan.cost_terms["hierarchical"]["axis_bytes"]["pod"]
+            flat = plan.cost_terms["flat"]["axis_bytes"]["pod"]
+            seq = plan.cost_terms["sequential"]["axis_bytes"]["pod"]
+            assert hier < flat, (sizes, nbytes)
+            assert hier < seq, (sizes, nbytes)
+            # every candidate still respects the (fast-fabric) bound
+            for shape, t in plan.predictions.items():
+                assert t >= plan.lower_bound - 1e-6, (sizes, nbytes,
+                                                      shape)
+
+
+def test_asymmetric_pricing_charges_slow_axis_more():
+    """The same plan shapes get strictly more expensive when the pod
+    link slows down -- and shapes that avoid cross-pod volume
+    (hierarchical) rise less than shapes that ship the full vector
+    across it (sequential, flat)."""
+    uni = CollectiveEngine(persist=False)
+    het = CollectiveEngine(fabric=_slow_pod_topology(4.0), persist=False)
+    nbytes = 4 << 20
+    p_uni = uni.plan_multi("allreduce", ("pod", "data"), (2, 8), nbytes)
+    p_het = het.plan_multi("allreduce", ("pod", "data"), (2, 8), nbytes)
+    for shape in ("sequential", "hierarchical", "flat"):
+        assert p_het.predictions[shape] > p_uni.predictions[shape], shape
+    rise = {s: p_het.predictions[s] / p_uni.predictions[s]
+            for s in ("sequential", "hierarchical", "flat")}
+    assert rise["hierarchical"] < rise["sequential"]
+    assert rise["hierarchical"] < rise["flat"]
+
+
+def test_uniform_topology_prices_bit_for_bit():
+    """Golden values captured from the pre-FabricTopology planner: a
+    uniform topology must reproduce every modeled price exactly --
+    threading per-axis fabrics through the planner cannot perturb the
+    single-fabric arithmetic."""
+    golden = {
+        ((2, 16), 1 << 22): {
+            "sequential": 29276.0, "flat": 26968.0,
+            "hierarchical": 19620.0, "2d_xy": 61076.0,
+            "2d_snake": 55555.0},
+        ((2, 4), 1 << 16): {
+            "sequential": 1704.0, "flat": 1830.0, "hierarchical": 1470.0,
+            "2d_xy": 1781.0, "2d_snake": 2289.0},
+        ((4, 4), 16 << 20): {
+            "sequential": 100448.0, "flat": 66808.0,
+            "hierarchical": 63402.0, "2d_xy": 198384.0,
+            "2d_snake": 167218.0},
+    }
+    for wrap in (TPU_V5E_AXIS, FabricTopology.uniform(TPU_V5E_AXIS)):
+        eng = CollectiveEngine(fabric=wrap, persist=False)
+        for (sizes, nbytes), want in golden.items():
+            plan = eng.plan_multi("allreduce", ("pod", "data"), sizes,
+                                  nbytes)
+            assert plan.predictions == want, (sizes, nbytes,
+                                              plan.predictions)
+        rs = eng.plan_multi("reduce_scatter", ("pod", "data"), (2, 4),
+                            1 << 20)
+        assert rs.predictions == {"cascade": 2506.0, "flat": 3044.0}
+        assert rs.lower_bound == 1969.0
+        assert eng.select("allreduce", 1 << 20, 8).predictions == {
+            "chain": 9969.0, "tree": 13350.0, "two_phase": 11479.0,
+            "ring": 6088.0}
+    wse = CollectiveEngine(fabric=WSE2, persist=False)
+    pw = wse.plan_multi("allreduce", ("y", "x"), (4, 4), 4096 * 512)
+    assert pw.predictions == {
+        "sequential": 12368.0, "flat": 7888.0, "hierarchical": 7750.0,
+        "2d_xy": 12335.0, "2d_snake": 8293.0}
+    assert pw.lower_bound == 4101.0
+
+
+def test_hetero_plans_do_not_collide_with_uniform_axis_names():
+    """Same axis sizes, different axis bindings: ('pod','data') prices
+    the pod axis slow, ('x','y') prices both with the default -- the
+    per-axis constants are part of the plan cache key, so the two must
+    not share entries (and the uniform one still rebinds freely)."""
+    eng = CollectiveEngine(fabric=_slow_pod_topology(4.0), persist=False)
+    nbytes = 4 << 20
+    p_slow = eng.plan_multi("allreduce", ("pod", "data"), (2, 8), nbytes)
+    assert eng.stats["plan_misses"] == 1
+    p_fast = eng.plan_multi("allreduce", ("x", "y"), (2, 8), nbytes)
+    assert eng.stats["plan_misses"] == 2, "hetero plan served for " \
+                                          "uniform axis names"
+    assert (p_slow.predictions["sequential"]
+            > p_fast.predictions["sequential"])
+    # uniform axis names rebind onto the cached uniform record
+    p_fast2 = eng.plan_multi("allreduce", ("u", "v"), (2, 8), nbytes)
+    assert eng.stats["plan_hits"] == 1
+    assert p_fast2.predictions == p_fast.predictions
+
+
+def test_no_plan_beats_lower_bound_heterogeneous():
+    """The Lemma-7.2 bound instantiated with best-of-axes constants
+    stays below every per-axis-priced candidate across asymmetry
+    factors and ops."""
+    for factor in (2.0, 4.0, 16.0):
+        eng = CollectiveEngine(fabric=_slow_pod_topology(factor),
+                               persist=False)
+        for op in ("allreduce", "reduce_scatter", "allgather"):
+            for sizes in ((2, 2), (2, 8), (4, 4)):
+                for nbytes in (512, 1 << 16, 1 << 22):
+                    plan = eng.plan_multi(op, ("pod", "data"), sizes,
+                                          nbytes)
+                    for shape, t in plan.predictions.items():
+                        assert t >= plan.lower_bound - 1e-6, (
+                            factor, op, sizes, nbytes, shape)
+
+
+def test_parse_fabric_topology_spec_drives_planner():
+    """The CLI spec form reaches the planner: 'pod=slow' prices pod
+    traffic 4x slower and flips bandwidth-bound plans hierarchical."""
+    topo = parse_fabric_topology("pod=slow,data=fast")
+    assert topo.for_axis("data") == TPU_V5E_AXIS
+    pod = topo.for_axis("pod")
+    assert pod.link_bw == pytest.approx(TPU_V5E_AXIS.link_bw / 4)
+    assert pod.t_r == pytest.approx(TPU_V5E_AXIS.t_r * 4)
+    eng = CollectiveEngine(fabric=topo, persist=False)
+    plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 16), 4 << 20)
+    assert plan.shape == "hierarchical"
 
 
 def test_lower_bound_multi_folding():

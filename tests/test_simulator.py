@@ -1,12 +1,14 @@
 """Simulator validation: flow vs closed forms, fabric vs flow, and the
 paper's own observations (star overhead, chain pipelining)."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core import patterns as pat
 from repro.core.autogen import autogen_tree, compute_tables
-from repro.core.model import WSE2
+from repro.core.model import Fabric, WSE2
 from repro.core.schedule import (binary_tree, chain_tree, snake_tree,
                                  star_tree, two_phase_tree)
 from repro.simulator.fabric import (simulate_broadcast_fabric,
@@ -68,6 +70,36 @@ def test_fabric_computes_exact_sums():
         data = rng.standard_normal((p, 32))
         res = simulate_reduce_fabric(two_phase_tree(p), 32, data=data)
         np.testing.assert_allclose(res.root_sum, data.sum(0), rtol=1e-9)
+
+
+def test_fabric_honors_fractional_t_r():
+    """Calibrated fabrics carry non-integer ramp latencies; the wavelet
+    simulator used to truncate ``t_r`` to int and silently mis-simulate
+    them.  Fractional ramps must (a) land between the neighboring
+    integer-``t_r`` results, (b) still compute the exact sum, and (c)
+    be rounded *up* -- never down -- by the closed-form broadcast."""
+    def fab(t_r):
+        return dataclasses.replace(WSE2, name=f"tr{t_r}", t_r=t_r)
+
+    for p, b in ((4, 16), (8, 32)):
+        tree = chain_tree(p)
+        data = np.random.default_rng(1).standard_normal((p, b))
+        lo = simulate_reduce_fabric(tree, b, data=data,
+                                    fabric=fab(2.0)).cycles
+        mid = simulate_reduce_fabric(tree, b, data=data,
+                                     fabric=fab(2.5)).cycles
+        hi = simulate_reduce_fabric(tree, b, data=data,
+                                    fabric=fab(3.0)).cycles
+        assert lo <= mid <= hi, (p, b, lo, mid, hi)
+        assert lo < hi, (p, b)
+        # a fractional ramp must cost more than its floor on a chain
+        # (every hop pays the ramp twice)
+        assert mid > lo, (p, b, lo, mid)
+    # closed-form broadcast: ceil, not truncate (2.25 ramps twice =
+    # +4.5 cycles -> 16 cycles, where int-truncation said 15)
+    res = simulate_broadcast_fabric(4, 8, fabric=fab(2.25))
+    assert res.cycles == 16
+    assert simulate_broadcast_fabric(4, 8, fabric=fab(2.0)).cycles == 15
 
 
 def test_fabric_autogen_trees_run():

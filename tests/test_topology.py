@@ -1,0 +1,152 @@
+"""FabricTopology: per-axis fabric constants (core model layer).
+
+Fast tier.  Covers the uniform fast path (same object, same prices),
+axis resolution incl. folded tuples, the CLI/JSON spec parser, and the
+link_bw scaling of Eq. (1) and the closed-form pattern prices.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import patterns as pat
+from repro.core.model import (CostTerms, Fabric, FabricTopology,
+                              TPU_V5E_AXIS, WSE2, as_topology,
+                              parse_fabric_topology, slowest_fabric)
+
+SLOW = dataclasses.replace(TPU_V5E_AXIS, name="slow", link_bw=0.25,
+                           t_r=TPU_V5E_AXIS.t_r * 4)
+
+
+# ------------------------------ topology ------------------------------ #
+def test_uniform_topology_fast_path():
+    topo = FabricTopology.uniform(TPU_V5E_AXIS)
+    assert topo.is_uniform
+    assert topo.for_axis("data") is TPU_V5E_AXIS
+    assert topo.for_axis(("pod", "data")) is TPU_V5E_AXIS
+    assert topo.for_axis(None) is TPU_V5E_AXIS
+    assert as_topology(TPU_V5E_AXIS) == topo
+    assert as_topology(topo) is topo
+
+
+def test_axis_overrides_and_normalization():
+    topo = FabricTopology(default=TPU_V5E_AXIS,
+                          axis_fabrics=(("pod", SLOW),))
+    assert not topo.is_uniform
+    assert topo.for_axis("pod") is SLOW
+    assert topo.for_axis("data") is TPU_V5E_AXIS
+    # folded tuples resolve to the slowest member
+    assert topo.for_axis(("pod", "data")) is SLOW
+    assert topo.for_axis(("data", "model")) is TPU_V5E_AXIS
+    # an override equal to the default is dropped (stays uniform)
+    same = FabricTopology(default=TPU_V5E_AXIS,
+                          axis_fabrics=(("data", TPU_V5E_AXIS),))
+    assert same.is_uniform
+    # construction order does not matter for equality/hash
+    a = FabricTopology(TPU_V5E_AXIS, (("a", SLOW), ("b", WSE2)))
+    b = FabricTopology(TPU_V5E_AXIS, (("b", WSE2), ("a", SLOW)))
+    assert a == b and hash(a) == hash(b)
+    # with_axis replaces in place
+    assert a.with_axis("a", TPU_V5E_AXIS).for_axis("a") is TPU_V5E_AXIS
+
+
+def test_slowest_fabric():
+    assert slowest_fabric(TPU_V5E_AXIS) is TPU_V5E_AXIS
+    assert slowest_fabric(TPU_V5E_AXIS, SLOW) is SLOW
+    assert slowest_fabric(SLOW, TPU_V5E_AXIS) is SLOW
+    # uniform input returns the shared object (bit-for-bit pricing)
+    assert slowest_fabric(TPU_V5E_AXIS, TPU_V5E_AXIS) is TPU_V5E_AXIS
+    with pytest.raises(ValueError):
+        slowest_fabric()
+
+
+# ------------------------------ spec parser ---------------------------- #
+def test_parse_spec_presets_and_floats():
+    topo = parse_fabric_topology("pod=slow,data=fast")
+    assert topo.for_axis("data") == TPU_V5E_AXIS
+    assert topo.for_axis("pod").link_bw == pytest.approx(0.25)
+    assert topo.for_axis("pod").t_r == pytest.approx(4 * 88.0)
+    # bare float = link_bw multiplier
+    topo = parse_fabric_topology("pod=0.5")
+    assert topo.for_axis("pod").link_bw == pytest.approx(0.5)
+    assert topo.for_axis("pod").t_r == TPU_V5E_AXIS.t_r
+    # default override applies to unnamed axes
+    topo = parse_fabric_topology("default=slow,pod=dcn")
+    assert topo.default.link_bw == pytest.approx(0.25)
+    assert topo.for_axis("pod").link_bw == pytest.approx(1.0 / 16.0)
+    # duplicate axis entries collapse last-wins instead of crashing
+    topo = parse_fabric_topology("pod=slow,pod=dcn")
+    assert topo.for_axis("pod").link_bw == pytest.approx(1.0 / 16.0)
+    with pytest.raises(ValueError):
+        parse_fabric_topology("pod:slow")
+    with pytest.raises(ValueError):
+        parse_fabric_topology("pod=warp9")
+    # zero/negative bandwidth multipliers fail at parse time, not with
+    # a ZeroDivisionError deep in pattern pricing
+    with pytest.raises(ValueError, match="must be > 0"):
+        parse_fabric_topology("pod=0")
+    with pytest.raises(ValueError, match="must be > 0"):
+        parse_fabric_topology("pod=-1")
+
+
+def test_parse_spec_json_file(tmp_path):
+    path = tmp_path / "topo.json"
+    path.write_text(json.dumps({
+        "default": {"t_r": 100.0, "multicast": False},
+        "axes": {"pod": {"name": "pod_link", "link_bw": 0.125},
+                 "data": {"t_r": 90.0}},
+    }))
+    topo = parse_fabric_topology(str(path))
+    assert topo.default.t_r == 100.0
+    assert topo.default.multicast is False
+    assert topo.for_axis("pod").name == "pod_link"
+    assert topo.for_axis("pod").link_bw == 0.125
+    assert topo.for_axis("pod").t_r == 100.0      # inherits default
+    assert topo.for_axis("data").t_r == 90.0
+
+
+# ---------------------------- link_bw pricing -------------------------- #
+def test_cost_terms_scale_with_link_bw():
+    terms = CostTerms(depth=2, distance=10, energy=4096, contention=512,
+                      links=8)
+    full = terms.cycles(WSE2)
+    half = terms.cycles(dataclasses.replace(WSE2, link_bw=0.5))
+    assert half > full
+    # depth/distance terms do not scale; wire terms double
+    assert half == pytest.approx(
+        max(512 / 0.5, 4096 / (8 * 0.5) + 10) + WSE2.per_depth_cost * 2)
+    # bw=1.0 is exactly the unscaled arithmetic
+    assert terms.cycles(dataclasses.replace(WSE2, link_bw=1.0)) == full
+
+
+@pytest.mark.parametrize("fn", [
+    pat.t_chain, pat.t_ring_allreduce, pat.t_ring_reduce_scatter,
+    pat.t_doubling_allgather, pat.t_doubling_broadcast,
+    pat.t_chain_broadcast, pat.t_star, pat.t_tree, pat.t_two_phase,
+])
+def test_pattern_prices_monotone_in_link_bw(fn):
+    p, b = 8, 4096
+    fast = fn(p, b, TPU_V5E_AXIS)
+    slow = fn(p, b, dataclasses.replace(TPU_V5E_AXIS, link_bw=0.25))
+    assert slow > fast, fn.__name__
+    # at bandwidth-bound sizes a 4x slower link costs ~4x the wire term
+    assert slow <= 4.0 * fast + 1e-9, fn.__name__
+
+
+def test_xy_reduce_per_axis_fabrics():
+    m, n, b = 4, 8, 4096
+    uni = pat.t_xy_reduce("chain", m, n, b, TPU_V5E_AXIS)
+    # explicit per-axis fabrics equal to the base: identical price
+    assert pat.t_xy_reduce("chain", m, n, b, TPU_V5E_AXIS,
+                           fabric_m=TPU_V5E_AXIS,
+                           fabric_n=TPU_V5E_AXIS) == uni
+    # slowing only the m (outer) dimension raises the price by the m
+    # leg's wire delta, not the n leg's
+    slow_m = pat.t_xy_reduce("chain", m, n, b, TPU_V5E_AXIS,
+                             fabric_m=SLOW)
+    slow_n = pat.t_xy_reduce("chain", m, n, b, TPU_V5E_AXIS,
+                             fabric_n=SLOW)
+    assert slow_m > uni and slow_n > uni
+    delta_m = pat.t_chain(m, b, SLOW) - pat.t_chain(m, b, TPU_V5E_AXIS)
+    assert slow_m - uni == pytest.approx(delta_m)

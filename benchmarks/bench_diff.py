@@ -16,7 +16,10 @@ Usage::
 A current value is a regression when it is worse than baseline by more
 than ``--tolerance`` (default 10%).  Missing keys in the current run
 (a variant or counter that disappeared) also fail: silently dropping a
-measurement is how trajectories go dark.
+measurement is how trajectories go dark.  The converse -- a gated
+counter present in the current run but absent from the baseline -- is a
+*new metric*, reported informationally and never failed, so adding
+BENCH counters lands green and the next baseline refresh picks them up.
 """
 
 from __future__ import annotations
@@ -57,6 +60,22 @@ def _walk(baseline: Any, current: Any, path: str = ""
         elif isinstance(b_val, dict):
             c_sub = current.get(key) if isinstance(current, dict) else None
             yield from _walk(b_val, c_sub, sub)
+
+
+def new_metrics(baseline: Any, current: Any, path: str = ""
+                ) -> Iterator[str]:
+    """Paths of gated counters the current run has but the baseline
+    lacks (newly added BENCH metrics awaiting a baseline refresh)."""
+    if not isinstance(current, dict):
+        return
+    for key, c_val in current.items():
+        sub = f"{path}/{key}" if path else key
+        b_sub = baseline.get(key) if isinstance(baseline, dict) else None
+        if key in GATED and isinstance(c_val, (int, float)):
+            if not (isinstance(baseline, dict) and key in baseline):
+                yield sub
+        elif isinstance(c_val, dict):
+            yield from new_metrics(b_sub, c_val, sub)
 
 
 def diff(baseline: Dict, current: Dict, tolerance: float
@@ -105,6 +124,9 @@ def main(argv=None) -> int:
         if key in baseline and key in current:
             print(f"# info {key}: baseline {baseline[key]:g} -> "
                   f"current {current[key]:g} (not gated)")
+    for path in new_metrics(baseline, current):
+        print(f"# new metric {path}: not in baseline yet (not gated; "
+              f"refresh the baseline to start gating it)")
 
     failures, checked = diff(baseline, current, args.tolerance)
     if checked == 0:

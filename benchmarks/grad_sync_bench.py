@@ -152,6 +152,9 @@ def run(small: bool = False, verbose: bool = True,
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
                                      "src")
+    # gated counters must not depend on a machine-local calibration:
+    # the child prices with the declared constants only
+    env["REPRO_RESTORE_TOPOLOGY"] = "0"
     proc = subprocess.run([sys.executable, "-c", child], env=env,
                           capture_output=True, text=True, timeout=1500)
     if proc.returncode != 0:

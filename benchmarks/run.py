@@ -10,8 +10,9 @@ import traceback
 
 from benchmarks import (fig1_optimality, fig8_heatmap_1d, fig10_heatmap_2d,
                         fig11_scaling_B, fig12_scaling_P, fig13_2d,
-                        grad_sync_bench, roofline_report, serve_bench,
-                        table_model_error, table_speedup, tpu_collectives)
+                        grad_sync_bench, moe_ep_bench, roofline_report,
+                        serve_bench, table_model_error, table_speedup,
+                        tpu_collectives)
 
 ALL = [
     ("fig1_optimality", fig1_optimality),
@@ -24,6 +25,7 @@ ALL = [
     ("table_model_error", table_model_error),
     ("tpu_collectives", tpu_collectives),
     ("grad_sync_bench", grad_sync_bench),
+    ("moe_ep_bench", moe_ep_bench),
     ("serve_bench", serve_bench),
     ("roofline_report", roofline_report),
 ]

@@ -1,7 +1,9 @@
 from repro.collectives.api import (allgather, allgather_inside,
                                    allgather_multi_inside, allreduce,
                                    allreduce_inside,
-                                   allreduce_multi_inside, broadcast,
+                                   allreduce_multi_inside,
+                                   all_to_all, all_to_all_inside,
+                                   all_to_all_multi_inside, broadcast,
                                    broadcast_inside, get_engine,
                                    plan_collective,
                                    reduce_scatter, reduce_scatter_inside,
@@ -19,6 +21,7 @@ __all__ = ["allreduce", "allreduce_inside", "allreduce_multi_inside",
            "reduce_scatter", "reduce_scatter_inside",
            "reduce_scatter_multi_inside",
            "allgather", "allgather_inside", "allgather_multi_inside",
+           "all_to_all", "all_to_all_inside", "all_to_all_multi_inside",
            "broadcast", "broadcast_inside", "reduce_to_root",
            "select_algorithm", "get_engine", "set_engine",
            "plan_collective", "CollectivePlan", "PlanStep",

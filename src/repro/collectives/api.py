@@ -4,6 +4,7 @@
     reduce_scatter(x, mesh, axis, algorithm="auto")
     allgather(x, mesh, axis, algorithm="auto")
     broadcast(x, mesh, axis, root=0, algorithm="auto")
+    all_to_all(x, mesh, axis, algorithm="auto")
 
 ``algorithm``:
   psum        -- XLA-native (baseline; what GSPMD would emit)
@@ -31,7 +32,8 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core.model import TPU_V5E_AXIS, Fabric, FabricTopology
-from repro.collectives.engine import CollectiveEngine
+from repro.collectives.engine import (CollectiveEngine,
+                                      find_calibrated_topology)
 
 _FabricKey = Union[Fabric, FabricTopology]
 _ENGINES: Dict[_FabricKey, CollectiveEngine] = {}
@@ -40,11 +42,24 @@ _ENGINES_LOCK = threading.Lock()
 
 def get_engine(fabric: _FabricKey = TPU_V5E_AXIS) -> CollectiveEngine:
     """Process-wide engine for a fabric or fabric topology (shared
-    decision cache)."""
+    decision cache).
+
+    The first time the *stock* default fabric is requested, the cache
+    directory is checked for a fleet-calibrated v3 ``FabricTopology``
+    (``load_topology`` on the persisted decision files): when one is
+    found, the default engine is built on those per-axis constants
+    instead, so a calibration run in one process prices every later
+    process without each caller re-installing it.  Opt out with
+    ``REPRO_RESTORE_TOPOLOGY=0`` (or pre-empt it via ``set_engine``)."""
     with _ENGINES_LOCK:
         eng = _ENGINES.get(fabric)
         if eng is None:
-            eng = CollectiveEngine(fabric=fabric)
+            build = fabric
+            if isinstance(fabric, Fabric):
+                restored = find_calibrated_topology(base=fabric)
+                if restored is not None:
+                    build = restored
+            eng = CollectiveEngine(fabric=build)
             _ENGINES[fabric] = eng
         return eng
 
@@ -102,6 +117,25 @@ def allgather_multi_inside(x: jax.Array, axes, algorithm: str = "auto",
     """Multi-axis allgather (``lax.all_gather(x, axes, tiled=True)``
     semantics) inside shard_map."""
     return get_engine(fabric).allgather_multi(x, axes, algorithm)
+
+
+def all_to_all_inside(x: jax.Array, axis, algorithm: str = "auto",
+                      fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Personalized exchange (``lax.all_to_all(..., tiled=True)``
+    semantics) along one axis inside shard_map."""
+    return get_engine(fabric).all_to_all_inside(x, axis, algorithm)
+
+
+def all_to_all_multi_inside(x: jax.Array, axes, algorithm: str = "auto",
+                            fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Joint multi-axis all_to_all (planner-driven) inside shard_map.
+
+    ``algorithm`` is ``"auto"`` or a plan shape: ``hierarchical`` (the
+    2-phase intra-pod/inter-pod decomposition) / ``sequential`` /
+    ``flat`` -- or ``"lax"`` (XLA native over the folded axes) or a 1D
+    backend name (``ring``/``halving``) forcing the innermost-first
+    phase order with that backend."""
+    return get_engine(fabric).all_to_all_multi(x, axes, algorithm)
 
 
 def plan_collective(op: str, mesh: Mesh, axes, nbytes: int,
@@ -164,10 +198,19 @@ def broadcast(x: jax.Array, mesh: Mesh, axis: str, root: int = 0,
     return get_engine(fabric).broadcast(x, mesh, axis, root, algorithm)
 
 
+def all_to_all(x: jax.Array, mesh: Mesh, axis: str,
+               algorithm: str = "auto",
+               fabric: Fabric = TPU_V5E_AXIS) -> jax.Array:
+    """Distributed transpose: x sharded along the axis, each device's
+    local block exchanged chunk-for-chunk with every peer."""
+    return get_engine(fabric).all_to_all(x, mesh, axis, algorithm)
+
+
 __all__ = ["get_engine", "set_engine", "select_algorithm",
            "allreduce", "allreduce_inside", "allreduce_multi_inside",
            "reduce_scatter", "reduce_scatter_inside",
            "reduce_scatter_multi_inside",
            "allgather", "allgather_inside", "allgather_multi_inside",
            "broadcast", "broadcast_inside", "reduce_to_root",
+           "all_to_all", "all_to_all_inside", "all_to_all_multi_inside",
            "plan_collective"]

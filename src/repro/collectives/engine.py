@@ -219,6 +219,53 @@ def load_topology(path: str) -> Optional[FabricTopology]:
         return None
 
 
+def find_calibrated_topology(base: Fabric = TPU_V5E_AXIS
+                             ) -> Optional[FabricTopology]:
+    """Newest fleet-calibrated :class:`FabricTopology` persisted under
+    ``REPRO_CACHE_DIR`` (the v3 ``topology`` section), or None.
+
+    Only *calibrated* topologies qualify (``calibrate()`` names them
+    ``<base>_calibrated``): a topology merely declared via a
+    ``--fabric`` spec describes one launch's assumption, not a measured
+    fleet property, and must not leak into unrelated processes sharing
+    the cache directory.  Likewise only ``base``'s constants family is
+    considered (the calibration keeps ``base`` as the default fabric),
+    so a WSE cache never leaks into a TPU engine.  Set
+    ``REPRO_RESTORE_TOPOLOGY=0`` to opt out -- e.g. when a process must
+    price with the stock constants regardless of what a previous
+    calibration run left behind."""
+    if os.environ.get("REPRO_RESTORE_TOPOLOGY", "1").lower() in (
+            "0", "false", "no", ""):
+        return None
+    d = cache_dir()
+    try:
+        names = os.listdir(d)
+    except OSError:
+        return None
+    paths = [os.path.join(d, n) for n in names
+             if n.startswith("engine_decisions__") and n.endswith(".json")]
+
+    def _mtime(p: str) -> float:
+        try:
+            return os.path.getmtime(p)
+        except OSError:
+            return 0.0
+
+    for path in sorted(paths, key=_mtime, reverse=True):
+        topo = load_topology(path)
+        if topo is None:
+            continue
+        if not topo.name.endswith("_calibrated"):
+            continue        # declared (--fabric) rather than measured
+        if topo.is_uniform and topo.default == base:
+            continue        # nothing beyond the stock constants
+        if (topo.default != base
+                and not topo.default.name.startswith(base.name)):
+            continue        # a different fabric family's cache
+        return topo
+    return None
+
+
 class CollectiveEngine:
     """Cached, model-driven dispatch for every collective op.
 
@@ -432,7 +479,9 @@ class CollectiveEngine:
                 return hit
             self.stats["misses"] += 1
             b = self._elements(nbytes)
-            include_autogen = op != "allreduce"
+            # allreduce keeps the paper-selector candidate set; all_to_all
+            # has no reduction tree, so neither models an Auto-Gen backend
+            include_autogen = op not in ("allreduce", "all_to_all")
             if include_autogen:
                 tables = self._tables_for(p)
             else:
@@ -718,6 +767,29 @@ class CollectiveEngine:
             return impl.schedule_allgather(x, axis, rounds)
         raise ValueError(f"unknown allgather algorithm {algorithm!r}")
 
+    def all_to_all_inside(self, x: jax.Array, axis, algorithm: str = "auto"
+                          ) -> jax.Array:
+        """Personalized exchange along one axis (or a row-major-folded
+        axis tuple): ``lax.all_to_all(x, axis, split_axis=0,
+        concat_axis=0, tiled=True)`` semantics -- x is [P*m, ...] with
+        destination-major leading chunks, the result source-major.
+        ``algorithm``: ``lax`` (XLA native), ``ring``
+        (pairwise-exchange, injection-optimal), ``halving`` (Bruck,
+        log-launch), or ``auto`` (model argmin)."""
+        p = impl._axis_size(axis)
+        if p == 1:
+            return x
+        if algorithm == "lax":
+            return lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        algorithm, _ = self._resolve(
+            "all_to_all", x.size * x.dtype.itemsize, p, algorithm, axis)
+        if algorithm == "ring":
+            return impl.all_to_all_ring(x, axis)
+        if algorithm == "halving":
+            return impl.all_to_all_bruck(x, axis)
+        raise ValueError(f"unknown all_to_all algorithm {algorithm!r}")
+
     def broadcast_inside(self, x: jax.Array, axis: str, root: int = 0,
                          algorithm: str = "auto") -> jax.Array:
         p = impl._axis_size(axis)
@@ -886,6 +958,80 @@ class CollectiveEngine:
             x = self.allgather_inside(x, step.axes[0], step.algorithm)
         return self._chunk_transpose(x, tuple(reversed(sizes)))
 
+    def all_to_all_multi(self, x: jax.Array, axes: Sequence[str],
+                         algorithm: str = "auto") -> jax.Array:
+        """Personalized exchange over an axis tuple through a joint
+        topology plan (``lax.all_to_all(x, axes, 0, 0, tiled=True)``
+        semantics over the row-major-folded axes).
+
+        ``algorithm`` is ``"auto"`` (planner argmin), a plan shape
+        (``"hierarchical" | "sequential" | "flat"``), ``"lax"`` (XLA
+        native single-shot over the folded axes), or a 1D backend name
+        (``ring``/``halving``), which forces the hierarchical
+        (innermost-first) phase order with that backend on every axis.
+        """
+        axes = tuple(axes)
+        if len(axes) == 1:
+            # a plan shape collapses to the 1D selector on a bare axis
+            if algorithm in planner.ALL_TO_ALL_SHAPES:
+                algorithm = "auto"
+            return self.all_to_all_inside(x, axes[0], algorithm)
+        if algorithm == "lax":
+            return lax.all_to_all(x, axes, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        sizes = self._multi_sizes(axes)
+        p = 1
+        for s in sizes:
+            p *= s
+        if p == 1:
+            return x
+        assert x.shape[0] % p == 0, (x.shape, p)
+        nbytes = x.size * x.dtype.itemsize
+        if algorithm == "auto" or algorithm in planner.ALL_TO_ALL_SHAPES:
+            shape = None if algorithm == "auto" else algorithm
+            plan = self.plan_multi("all_to_all", axes, sizes, nbytes,
+                                   shape=shape)
+            if plan.shape == "flat":
+                (step,) = plan.steps
+                return self.all_to_all_inside(x, step.axes,
+                                              step.algorithm)
+            return self._run_a2a_phases(x, axes, sizes, plan.steps)
+        # legacy: explicit 1D backend on every axis, innermost first
+        steps = tuple(
+            planner.PlanStep("all_to_all", (a,), algorithm, nbytes)
+            for a, s in zip(reversed(axes), reversed(sizes)) if s > 1)
+        return self._run_a2a_phases(x, axes, sizes, steps)
+
+    def _run_a2a_phases(self, x: jax.Array, axes: Tuple[str, ...],
+                        sizes: Tuple[int, ...],
+                        steps: Sequence["planner.PlanStep"]) -> jax.Array:
+        """Execute per-axis all-to-all phases over the block grid.
+
+        The leading dim is viewed as a ``sizes``-shaped grid of blocks
+        (destination-major).  A phase on axis *i* exchanges along block
+        dim *i* only, turning that destination coordinate into the
+        source coordinate in place -- so after every effective axis has
+        run once (any order), the block grid is source-major row-major,
+        exactly ``lax.all_to_all`` over the folded tuple."""
+        k = len(sizes)
+        p = 1
+        for s in sizes:
+            p *= s
+        m = x.shape[0] // p
+        blocks = x.reshape(tuple(sizes) + (m,) + x.shape[1:])
+        for step in steps:
+            i = axes.index(step.axes[0])
+            perm = ((i,) + tuple(j for j in range(k) if j != i)
+                    + tuple(range(k, blocks.ndim)))
+            t = blocks.transpose(perm)
+            t_shape = t.shape
+            flat = t.reshape((-1,) + x.shape[1:])
+            out = self.all_to_all_inside(flat, step.axes[0],
+                                         algorithm=step.algorithm)
+            inv = tuple(int(j) for j in np.argsort(perm))
+            blocks = out.reshape(t_shape).transpose(inv)
+        return blocks.reshape(x.shape)
+
     # ------------------------------------------------------------------ #
     # outer wrappers: build the shard_map for replicated operands
     # ------------------------------------------------------------------ #
@@ -922,8 +1068,17 @@ class CollectiveEngine:
         fn = lambda v: self.broadcast_inside(v, axis, root, algorithm)
         return self._wrap(fn, mesh, P(), P())(x)
 
+    def all_to_all(self, x: jax.Array, mesh: Mesh, axis: str,
+                   algorithm: str = "auto") -> jax.Array:
+        """x sharded [N, ...] along the axis (N a multiple of P*P): each
+        device's local [N/P, ...] block is exchanged chunk-for-chunk --
+        the distributed transpose."""
+        fn = lambda v: self.all_to_all_inside(v, axis, algorithm)
+        return self._wrap(fn, mesh, P(axis), P(axis))(x)
+
 
 __all__ = ["CollectiveEngine", "Decision", "fit_fabric",
-           "measure_ppermute", "load_topology", "topology_to_dict",
+           "measure_ppermute", "load_topology", "find_calibrated_topology",
+           "topology_to_dict",
            "topology_from_dict", "fabric_to_dict", "SCHEMA_VERSION",
            "ICI_ELEMENT_BYTES"]

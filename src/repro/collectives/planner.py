@@ -36,6 +36,13 @@ fewer cross-pod bytes" an assertable fact rather than folklore.
 ``flat`` shape; their lower bound instantiates Lemma 7.2 at the
 ``B * (P-1)/P`` bytes every device must minimally move.
 
+``all_to_all`` plans (the EP dispatch traffic class) use
+``hierarchical`` (2-phase intra-pod/inter-pod: innermost axis first,
+aggregating cross-pod traffic before it hits the slow links),
+``sequential`` (outermost-first), and ``flat`` (single-shot over the
+folded axis); every candidate validates against the Theta(B*(P-1)/P)
+injection bound (``core.lowerbound.t_all_to_all_lower_bound``).
+
 Plans are positional (axis *sizes*, not names) so the engine can cache
 them under the topology signature ``(op, axis_sizes, bytes, fabric)``
 and rebind mesh axis names on retrieval.
@@ -48,6 +55,7 @@ import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import patterns as pat
+from repro.core.lowerbound import t_all_to_all_lower_bound
 from repro.core.model import Fabric, ceil_div, slowest_fabric
 from repro.core.selector import t_broadcast_2d_fabric
 
@@ -56,6 +64,8 @@ ALLREDUCE_SHAPES = ("sequential", "hierarchical", "2d_xy", "2d_snake",
                     "flat")
 #: shapes a multi-axis reduce_scatter / allgather plan may take
 SHARDED_SHAPES = ("cascade", "flat")
+#: shapes a multi-axis all_to_all plan may take
+ALL_TO_ALL_SHAPES = ("hierarchical", "sequential", "flat")
 
 #: the engine's select() viewed from the planner:
 #: (op, nbytes, p, topo=None, fabric=None) -- ``fabric`` carries the
@@ -148,7 +158,7 @@ class CollectivePlan:
 
 _KIND_ABBREV = {"reduce_scatter": "rs", "allreduce": "ar",
                 "allgather": "ag", "xy_allreduce": "xy",
-                "snake_allreduce": "snake"}
+                "snake_allreduce": "snake", "all_to_all": "a2a"}
 
 
 def _elements(nbytes: int, element_bytes: int) -> int:
@@ -198,6 +208,11 @@ def lower_bound_multi(op: str, sizes: Sequence[int], nbytes: int,
     eff_fabs = [fabs[i] for i, _ in _effective(sizes)]
     lbf = _lb_fabric(eff_fabs or [fabric])
     b = _elements(nbytes, element_bytes)
+    if op == "all_to_all":
+        # Theta(B*(P-1)/P) injection bound over the folded world size;
+        # per-axis phases each inject >= B*(p_ax-1)/p_ax and those
+        # fractions sum to >= (P-1)/P, so decompositions stay above it.
+        return t_all_to_all_lower_bound(m * n, b, lbf)
     if op in ("reduce_scatter", "allgather"):
         p = m * n
         b = max(1, math.ceil(b * (p - 1) / p))
@@ -384,6 +399,62 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
                    shapes, force_shape, fabs)
 
 
+def _score_a2a_phases(nbytes: int, select: SelectFn, fabs: AxisFabrics,
+                      order: Sequence[Tuple[int, int]]
+                      ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+    """One full-B all-to-all per axis, in ``order``: each phase settles
+    that axis's destination sub-index (the data stays B bytes per device
+    throughout -- AllToAll conserves volume)."""
+    t = 0.0
+    steps: List[PlanStep] = []
+    axis_bytes: Dict[int, float] = {}
+    for i, p in order:
+        d = select("all_to_all", nbytes, p, fabric=fabs[i])
+        t += d.predicted
+        steps.append(PlanStep("all_to_all", (i,), d.algorithm, nbytes))
+        axis_bytes[i] = _wire_bytes(nbytes, p)
+    return t, steps, axis_bytes
+
+
+def _plan_all_to_all(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
+                     element_bytes: int, select: SelectFn,
+                     force_shape: Optional[str] = None,
+                     axis_fabrics: Optional[Sequence[Fabric]] = None
+                     ) -> Dict[str, Any]:
+    """AllToAll joint plans.
+
+    * ``hierarchical`` -- the 2-phase intra-pod/inter-pod decomposition
+      (generalized to k phases): exchange along the innermost axis
+      first, aggregating each pod's cross-pod traffic into contiguous
+      per-pod stripes, then along the outer axes.  Cross-pod wire bytes
+      drop to B*(M-1)/M per device -- the quantity the flat single-shot
+      is (conservatively) charged on every link class it folds.
+    * ``sequential`` -- the same per-axis factorization in the naive
+      outermost-first order.  AllToAll conserves bytes, so its model
+      price equals hierarchical's; ties resolve to ``hierarchical``
+      (inserted first), which is also the order that aggregates
+      cross-pod messages before they hit the slow links.
+    * ``flat``       -- one single-shot exchange over the row-major
+      folded axis (depth P-1), priced at the slowest member fabric with
+      every axis charged the full folded traffic.
+    """
+    eff = _effective(sizes)
+    fabs = _axis_fabrics(sizes, fabric, axis_fabrics)
+    shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
+    if len(eff) < 2:
+        shapes["sequential"] = _score_a2a_phases(nbytes, select, fabs,
+                                                 list(eff))
+    else:
+        shapes["hierarchical"] = _score_a2a_phases(nbytes, select, fabs,
+                                                   list(reversed(eff)))
+        shapes["sequential"] = _score_a2a_phases(nbytes, select, fabs,
+                                                 list(eff))
+        shapes["flat"] = _score_flat("all_to_all", sizes, nbytes, select,
+                                     fabs)
+    return _finish("all_to_all", sizes, nbytes, fabric, element_bytes,
+                   shapes, force_shape, fabs)
+
+
 def _plan_sharded(op: str, sizes: Tuple[int, ...], nbytes: int,
                   fabric: Fabric, element_bytes: int, select: SelectFn,
                   force_shape: Optional[str] = None,
@@ -469,6 +540,9 @@ def plan_collective(op: str, sizes: Sequence[int], nbytes: int,
     if op in ("reduce_scatter", "allgather"):
         return _plan_sharded(op, sizes, nbytes, fabric, element_bytes,
                              select, force_shape, axis_fabrics)
+    if op == "all_to_all":
+        return _plan_all_to_all(sizes, nbytes, fabric, element_bytes,
+                                select, force_shape, axis_fabrics)
     raise ValueError(f"no multi-axis planner for op {op!r}")
 
 
@@ -497,4 +571,5 @@ def bind_plan(record: Dict[str, Any], op: str,
 
 
 __all__ = ["CollectivePlan", "PlanStep", "plan_collective", "bind_plan",
-           "lower_bound_multi", "ALLREDUCE_SHAPES", "SHARDED_SHAPES"]
+           "lower_bound_multi", "ALLREDUCE_SHAPES", "SHARDED_SHAPES",
+           "ALL_TO_ALL_SHAPES"]

@@ -231,6 +231,59 @@ def allgather_doubling(x: jax.Array, axis: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------- #
+# AllToAll (personalized exchange).  Semantics match
+# ``lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)``:
+# x is [P*m, ...] with destination-major leading chunks; the output's
+# chunk j is device j's chunk for *this* device (source-major).  The
+# axis may be a tuple (row-major-folded logical axis), in which case
+# chunk order is the folded device order.
+# ---------------------------------------------------------------------- #
+def all_to_all_ring(x: jax.Array, axis) -> jax.Array:
+    """Pairwise-exchange (shift) all-to-all: P-1 rounds; round t ships
+    the B/P chunk destined t ranks away as one shift-by-t ppermute.
+    Injection-optimal (B*(P-1)/P wire per device)."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    n = x.shape[0]
+    assert n % p == 0, (n, p)
+    chunks = x.reshape((p, n // p) + x.shape[1:])
+    out = chunks                     # slot idx: own chunk stays local
+    for t in range(1, p):
+        sent = jnp.take(chunks, (idx + t) % p, axis=0)
+        recv = lax.ppermute(sent, axis,
+                            [(i, (i + t) % p) for i in range(p)])
+        out = out.at[(idx - t) % p].set(recv)
+    return out.reshape(x.shape)
+
+
+def all_to_all_bruck(x: jax.Array, axis) -> jax.Array:
+    """Bruck recursive-halving all-to-all: ceil(log2 P) rounds, round k
+    shipping every chunk whose (rotated) slot index has bit k set a
+    2^k-rank shift.  A chunk starting in slot j travels exactly j ranks
+    forward, so after the initial rotation (slot j <- chunk destined
+    (idx + j) mod P) every chunk lands on its destination; the final
+    gather restores source-major order."""
+    p = _axis_size(axis)
+    idx = _axis_index(axis)
+    n = x.shape[0]
+    assert n % p == 0, (n, p)
+    chunks = x.reshape((p, n // p) + x.shape[1:])
+    rot = jnp.take(chunks, (idx + jnp.arange(p)) % p, axis=0)
+    k = 0
+    while (1 << k) < p:
+        shift = 1 << k
+        slots = jnp.array([j for j in range(p) if (j >> k) & 1])
+        sent = jnp.take(rot, slots, axis=0)
+        recv = lax.ppermute(sent, axis,
+                            [(i, (i + shift) % p) for i in range(p)])
+        rot = rot.at[slots].set(recv)
+        k += 1
+    # slot j now holds the block from source (idx - j) mod P
+    out = jnp.take(rot, (idx - jnp.arange(p)) % p, axis=0)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------- #
 # ring AllReduce (Sec. 6.2): reduce-scatter + all-gather
 # ---------------------------------------------------------------------- #
 def ring_allreduce(x: jax.Array, axis: str) -> jax.Array:
@@ -443,6 +496,7 @@ __all__ = [
     "chain_reduce", "tree_reduce", "two_phase_reduce", "star_reduce",
     "broadcast", "chain_broadcast", "ring_allreduce",
     "reduce_scatter_ring", "allgather_ring", "allgather_doubling",
+    "all_to_all_ring", "all_to_all_bruck",
     "xy_reduce_2d", "snake_reduce_2d", "broadcast_2d", "xy_allreduce_2d",
     "snake_allreduce_2d",
     "schedule_reduce", "schedule_reduce_pipelined", "schedule_broadcast",

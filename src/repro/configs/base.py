@@ -57,6 +57,14 @@ class ArchConfig:
     moe_shardmap_ep: bool = True    # explicit shard_map EP dispatch
                                     # (False = GSPMD-resolved scatter/
                                     # gather; kept for §Perf baselines)
+    moe_ep: bool = False            # true expert parallelism: tokens
+                                    # sharded over the EP axes, dispatch/
+                                    # combine as explicit all-to-all
+                                    # (models/moe_ep.py)
+    moe_ep_algorithm: str = "auto"  # exchange backend: "lax" (bare
+                                    # single-shot) or an engine
+                                    # algorithm/plan shape ("auto",
+                                    # "hierarchical", "ring", ...)
     remat_policy: str = "full"      # full | dots | dots_no_batch
     grad_barrier: bool = False      # optimization_barrier on block-input
                                     # cotangents (keeps TP grad

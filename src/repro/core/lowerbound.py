@@ -71,4 +71,19 @@ def t_lower_bound(p: int, b: int, fabric: Fabric = WSE2,
     return float(t.min())
 
 
-__all__ = ["compute_lb_energy", "t_lower_bound"]
+def t_all_to_all_lower_bound(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Theta(B*(P-1)/P) injection bound for AllToAll (personalized
+    exchange, no reduction): every device must send -- and receive --
+    B*(P-1)/P elements through its own ramp, in at least one launch:
+
+        T*(P, B) >= B*(P-1)/P / link_bw + (2*T_R + 1)
+
+    Topology effects (the ring-bisection ~B*P/4 per-link load of a
+    single-shot folded exchange) only raise candidate costs above this;
+    dropping them keeps it a bound on every implemented pattern."""
+    if p <= 1:
+        return 0.0
+    return b * (p - 1) / p / fabric.link_bw + fabric.per_depth_cost
+
+
+__all__ = ["compute_lb_energy", "t_lower_bound", "t_all_to_all_lower_bound"]

@@ -188,6 +188,67 @@ REDUCE_SCATTER_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
     "ring": t_ring_reduce_scatter,
 }
 
+
+# ---------------------------------------------------------------------- #
+# AllToAll (personalized exchange): every device holds B elements, B/P
+# destined to each peer.  The op conserves bytes (no reduction), so the
+# candidate frontier is injection-vs-launch count: the pairwise/ring
+# exchange is injection-optimal (B*(P-1)/P per device) at P-1 launches,
+# the Bruck recursive-halving ships ~B/2 per round but only needs
+# ceil(log2 P) launches -- the small-B winner.  On the physical ring the
+# shift-by-t round's messages travel min(t, P-t) hops, so per-link
+# traffic sums to ~B*P/4: the ring-bisection term the planner's flat
+# single-shot pays and the hierarchical 2-phase decomposition avoids.
+# ---------------------------------------------------------------------- #
+def _ring_hop_sum(p: int) -> int:
+    """Total shortest-path hop distance of the P-1 shift rounds."""
+    return sum(min(t, p - t) for t in range(1, p))
+
+
+def t_ring_all_to_all(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Pairwise-exchange all-to-all on a ring: P-1 rounds; round t ships
+    the B/P chunk destined t ranks away as one shift-by-t permutation."""
+    if p <= 1:
+        return 0.0
+    bw = fabric.link_bw
+    chunk = b / p
+    contention = b * (p - 1) / p / bw          # injection per device
+    bandwidth = chunk * _ring_hop_sum(p) / bw  # per-link element load
+    distance = float(p - 1)                    # pipeline fill across rounds
+    return (max(contention, bandwidth + distance)
+            + fabric.per_depth_cost * (p - 1))
+
+
+def t_halving_all_to_all(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Bruck recursive halving: round k ships every chunk whose slot has
+    bit k set (~B/2 elements) a 2^k-rank shift; ceil(log2 P) launches
+    total, trading ~log2(P)/2 x injected bytes for log-depth latency."""
+    if p <= 1:
+        return 0.0
+    bw = fabric.link_bw
+    chunk = b / p
+    sent = 0.0        # elements injected per device, all rounds
+    link_load = 0.0   # per-link element load (energy / P links)
+    distance = 0.0
+    rounds = 0
+    shift = 1
+    while shift < p:
+        n_slots = sum(1 for j in range(p) if (j >> rounds) & 1)
+        hop = min(shift, p - shift)
+        sent += chunk * n_slots
+        link_load += chunk * n_slots * hop
+        distance += hop
+        rounds += 1
+        shift <<= 1
+    return (max(sent / bw, link_load / bw + distance)
+            + fabric.per_depth_cost * rounds)
+
+
+ALL_TO_ALL_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
+    "ring": t_ring_all_to_all,
+    "halving": t_halving_all_to_all,
+}
+
 ALLGATHER_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
     "ring": t_ring_allgather,
     "doubling": t_doubling_allgather,
@@ -267,6 +328,7 @@ __all__ = [
     "t_snake_reduce", "t_xy_allreduce", "t_reduce_bcast_2d",
     "t_lower_bound_2d", "t_ring_reduce_scatter", "t_ring_allgather",
     "t_doubling_allgather", "t_doubling_broadcast", "t_chain_broadcast",
+    "t_ring_all_to_all", "t_halving_all_to_all",
     "REDUCE_PATTERNS", "ALLREDUCE_PATTERNS", "REDUCE_SCATTER_PATTERNS",
-    "ALLGATHER_PATTERNS", "BROADCAST_PATTERNS",
+    "ALLGATHER_PATTERNS", "BROADCAST_PATTERNS", "ALL_TO_ALL_PATTERNS",
 ]

@@ -113,12 +113,33 @@ def predict_broadcast(p: int, b: int, fabric: Fabric = WSE2,
     return preds
 
 
+def predict_all_to_all(p: int, b: int, fabric: Fabric = WSE2,
+                       include_autogen: bool = True,
+                       tables: Optional[AutoGenTables] = None
+                       ) -> Dict[str, float]:
+    """AllToAll has no reduction tree, so there is no Auto-Gen backend:
+    the candidate set is the closed-form patterns (injection-optimal
+    pairwise ring vs log-launch Bruck halving).  ``include_autogen`` /
+    ``tables`` are accepted for signature uniformity and ignored."""
+    del include_autogen, tables
+    preds = {name: fn(p, b, fabric)
+             for name, fn in pat.ALL_TO_ALL_PATTERNS.items()}
+    return preds
+
+
+def best_all_to_all(p: int, b: int, fabric: Fabric = WSE2) -> Selection:
+    preds = predict_all_to_all(p, b, fabric)
+    name = min(preds, key=preds.get)
+    return Selection(name, preds[name], preds)
+
+
 _OP_PREDICTORS = {
     "reduce": predict_reduce,
     "allreduce": predict_allreduce,
     "reduce_scatter": predict_reduce_scatter,
     "allgather": predict_allgather,
     "broadcast": predict_broadcast,
+    "all_to_all": predict_all_to_all,
 }
 
 COLLECTIVE_OPS = tuple(_OP_PREDICTORS)
@@ -242,7 +263,8 @@ def optimality_ratios(p: int, b_values: Sequence[int], fabric: Fabric = WSE2,
 __all__ = [
     "Selection", "predict_reduce", "best_reduce", "predict_allreduce",
     "best_allreduce", "predict_reduce_scatter", "predict_allgather",
-    "predict_broadcast", "predict_collective", "best_collective",
+    "predict_broadcast", "predict_all_to_all", "best_all_to_all",
+    "predict_collective", "best_collective",
     "predict_allreduce_2d", "t_broadcast_2d_fabric",
     "COLLECTIVE_OPS", "heatmap_1d_allreduce", "heatmap_2d_allreduce",
     "optimality_ratios",

@@ -61,9 +61,13 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
         lhs, _, rhs = stripped.partition("=")
         rhs = rhs.strip()
         for op in COLLECTIVE_OPS:
-            # match ` = <shape(s)> op-name(' with optional `-start` / `-done`
+            # match ` = <shape(s)> op-name(' with optional `-start` /
+            # `-done`.  `=` must be in the shape class: big tuple
+            # results carry `/*index=5*/` comments (e.g. the 8-operand
+            # all-to-all), and `(` is excluded, so the lazy match still
+            # cannot cross into an op's operand list.
             m = re.match(
-                r"^(\(?[\w\[\],{}\s/#*]*?\)?)\s*%?" + op + r"(-start)?\(",
+                r"^(\(?[\w\[\],{}\s/#*=]*?\)?)\s*%?" + op + r"(-start)?\(",
                 rhs)
             if m:
                 if m.group(2):  # async start: count here, skip the -done

@@ -75,13 +75,26 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
         reduced: bool = True, ckpt_dir: str | None = None,
         ckpt_every: int = 50, lr: float = 3e-4, microbatches: int = 1,
         log_every: int = 10, resume: bool = True, dp: bool = False,
-        grad_sync_mode: str = "allreduce", fabric_spec: str | None = None):
+        grad_sync_mode: str = "allreduce", fabric_spec: str | None = None,
+        moe_ep: str | None = None, num_experts: int | None = None):
     if fabric_spec:
         topo = install_fabric_topology(fabric_spec)
         print(f"[train] fabric topology: {topo.describe()}")
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    if num_experts is not None or moe_ep is not None:
+        import dataclasses
+    if num_experts is not None:
+        cfg = dataclasses.replace(cfg, num_experts=num_experts)
+    if moe_ep is not None:
+        if cfg.family != "moe":
+            raise SystemExit(f"--moe-ep needs an MoE architecture; "
+                             f"{arch} is family={cfg.family!r}")
+        cfg = dataclasses.replace(cfg, moe_ep=True,
+                                  moe_ep_algorithm=moe_ep)
+        print(f"[train] expert-parallel MoE dispatch: "
+              f"all_to_all[{moe_ep}]")
     schedule = "wsd" if arch == "minicpm-2b" else "cosine"
     opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 1),
                           total_steps=steps, schedule=schedule)
@@ -193,11 +206,22 @@ def main():
                          "multipliers) or a path to a JSON topology "
                          "file; the planner prices each mesh axis "
                          "with its declared link constants")
+    ap.add_argument("--moe-ep", nargs="?", const="auto", default=None,
+                    metavar="ALGO",
+                    help="route MoE expert dispatch/combine through "
+                         "explicit all-to-all (models/moe_ep.py): "
+                         "'lax' = bare single-shot baseline, else an "
+                         "engine algorithm or plan shape ('auto', "
+                         "'hierarchical', 'ring', ...; default auto)")
+    ap.add_argument("--experts", type=int, default=None,
+                    help="override num_experts (e.g. to tile the "
+                         "8-virtual-device EP world under --reduced)")
     args = ap.parse_args()
     run(args.arch, args.steps, args.batch, args.seq, reduced=args.reduced,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
         microbatches=args.microbatches, dp=args.dp,
-        grad_sync_mode=args.grad_sync, fabric_spec=args.fabric)
+        grad_sync_mode=args.grad_sync, fabric_spec=args.fabric,
+        moe_ep=args.moe_ep, num_experts=args.experts)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,15 @@
 """Model zoo: functional JAX implementations of the assigned families."""
 
-from repro.models import frontend, layers, moe, paged, rglru, scan_utils, ssm
+from repro.models import (frontend, layers, moe, moe_ep, paged, rglru,
+                          scan_utils, ssm)
 from repro.models.paged import (decode_step_paged, forward_paged, init_pages,
                                 supports_paged)
 from repro.models.transformer import (decode_step, forward_train, init_cache,
                                       init_params, param_specs, prefill)
 
 __all__ = [
-    "frontend", "layers", "moe", "paged", "rglru", "scan_utils", "ssm",
+    "frontend", "layers", "moe", "moe_ep", "paged", "rglru", "scan_utils",
+    "ssm",
     "decode_step", "decode_step_paged", "forward_train", "forward_paged",
     "init_cache", "init_pages", "init_params", "param_specs", "prefill",
     "supports_paged",

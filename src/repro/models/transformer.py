@@ -229,8 +229,13 @@ def _cross_attention(cfg: ArchConfig, x, p, enc_k, enc_v):
 def _ffn_sublayer(cfg: ArchConfig, x, p):
     """Returns (ffn_out, aux_loss)."""
     if cfg.family == "moe":
-        moe_fn = (moe_lib.moe_ffn_sharded if cfg.moe_shardmap_ep
-                  else moe_lib.moe_ffn)
+        if cfg.moe_ep:
+            from repro.models.moe_ep import moe_ffn_ep
+            moe_fn = functools.partial(moe_ffn_ep,
+                                       algorithm=cfg.moe_ep_algorithm)
+        else:
+            moe_fn = (moe_lib.moe_ffn_sharded if cfg.moe_shardmap_ep
+                      else moe_lib.moe_ffn)
         out, aux = moe_fn(
             x, p["router"], p["eg"], p["eu"], p["ed"],
             top_k=cfg.experts_per_token,

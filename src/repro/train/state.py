@@ -45,5 +45,43 @@ def abstract_train_state(cfg) -> TrainState:
     return jax.eval_shape(init_train_state, p)
 
 
+def fsdp_state_to_tree(state: TrainState) -> TrainState:
+    """Convert ``mode="fsdp"`` flat optimizer state back to the tree
+    layout, so an FSDP checkpoint resumes under ``mode="gspmd"`` /
+    ``"allreduce"`` (``apply_updates`` on per-parameter moments).
+
+    ``fsdp_sync_apply`` keeps ``mu``/``nu`` -- and ``master`` when
+    enabled -- as single flat fp32 vectors, padded to a multiple of the
+    DP world and sharded over the DP axes.  This strips the padding and
+    unflattens each back to the parameter tree (fp32, matching
+    ``optim.adamw.init_state``).  Leaves that are already trees pass
+    through untouched, so the helper is safe to run on any restored
+    TrainState; the round trip ``flatten -> fsdp_state_to_tree`` is
+    exact (no dtype cast ever happens on the fp32 state).
+    """
+    from repro.collectives.overlap import unflatten_tree
+
+    leaves, treedef = jax.tree.flatten(state.params)
+    sizes = [l.size for l in leaves]
+    shapes = [l.shape for l in leaves]
+    n = sum(sizes)
+    meta32 = (treedef, sizes, shapes, [jnp.float32] * len(leaves))
+
+    def back(tree):
+        if tree is None:
+            return None
+        flat = jax.tree.leaves(tree)
+        if not (len(flat) == 1 and flat[0].ndim == 1
+                and flat[0].size >= n):
+            return tree             # already tree-shaped
+        return unflatten_tree(flat[0][:n], meta32)
+
+    opt = state.opt
+    return TrainState(
+        params=state.params,
+        opt=AdamWState(mu=back(opt.mu), nu=back(opt.nu),
+                       count=opt.count, master=back(opt.master)))
+
+
 __all__ = ["TrainState", "init_train_state", "train_state_shardings",
-           "abstract_train_state"]
+           "abstract_train_state", "fsdp_state_to_tree"]

@@ -5,8 +5,10 @@ globally).
 Covers the 1D backends, and the topology planner's joint multi-axis
 plans (hierarchical / 2D xy / 2D snake / flat / sequential) against the
 jax.lax references on the (2,2,2) and (2,4) debug meshes -- including
-the compress=True error-feedback path over an axis tuple and the FSDP
-GradSyncConfig mode against the GSPMD baseline."""
+the compress=True error-feedback path over an axis tuple, the FSDP
+GradSyncConfig mode against the GSPMD baseline, and every all_to_all
+backend/plan shape against ``jax.lax.all_to_all`` (single axis, (2,4)
+and (2,2,2) axis tuples, fp32 + bf16)."""
 
 import json
 import os
@@ -137,6 +139,46 @@ mplan = bucket_algorithm_plan(grads, mesh22, axes=("pod", "data"),
                               bucket_bytes=2048)
 results["multi_plan_reports_shapes"] = len(mplan) > 1 and all(
     "(" in desc for _, desc in mplan)
+
+# ------------------- all_to_all vs the lax references ------------------ #
+from repro.collectives.api import all_to_all_inside, all_to_all_multi_inside
+
+def a2a_check(mesh_shape, mesh_axes, axes, dtype, tag):
+    mesh_a = jax.make_mesh(mesh_shape, mesh_axes)
+    p = 1
+    for a in axes:
+        p *= mesh_a.shape[a]
+    xa = jax.random.normal(jax.random.PRNGKey(7),
+                           (p * 3, 5)).astype(dtype)
+    axis_ref = axes if len(axes) > 1 else axes[0]
+    ref_fn = shard_map(
+        lambda v: jax.lax.all_to_all(v, axis_ref, 0, 0, tiled=True),
+        mesh=mesh_a, in_specs=P(), out_specs=P(), check_rep=False)
+    with mesh_a:
+        ref = np.asarray(jax.jit(ref_fn)(xa), np.float32)
+    algos = (("auto", "ring", "halving") if len(axes) == 1 else
+             ("auto", "hierarchical", "sequential", "flat", "ring",
+              "halving"))
+    for algo in algos:
+        if len(axes) == 1:
+            body = functools.partial(all_to_all_inside, axis=axes[0],
+                                     algorithm=algo)
+        else:
+            body = functools.partial(all_to_all_multi_inside, axes=axes,
+                                     algorithm=algo)
+        fn = shard_map(body, mesh=mesh_a, in_specs=P(), out_specs=P(),
+                       check_rep=False)
+        with mesh_a:
+            out = np.asarray(jax.jit(fn)(xa), np.float32)
+        results[f"a2a_{tag}_{algo}"] = bool(
+            np.allclose(out, ref, rtol=1e-4, atol=1e-4))
+
+for dtype, dtag in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16")):
+    a2a_check((8,), ("data",), ("data",), dtype, f"1d_{dtag}")
+    a2a_check((2, 4), ("pod", "data"), ("pod", "data"), dtype,
+              f"24_{dtag}")
+    a2a_check((2, 2, 2), ("pod", "data", "model"),
+              ("pod", "data", "model"), dtype, f"222_{dtag}")
 print("JSON" + json.dumps(results))
 """
 

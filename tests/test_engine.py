@@ -185,6 +185,82 @@ def test_per_axis_calibration_persists_v3_topology(tmp_path):
     assert eng2.stats["plan_misses"] == 0
 
 
+def test_get_engine_auto_restores_calibrated_topology(tmp_path,
+                                                      monkeypatch):
+    """A per-axis calibration persisted under REPRO_CACHE_DIR is
+    auto-restored by ``api.get_engine()`` in a fresh process: the
+    default engine comes up on the calibrated constants without the
+    caller re-installing them.  ``REPRO_RESTORE_TOPOLOGY=0`` opts out."""
+    from repro.collectives import api
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_RESTORE_TOPOLOGY", raising=False)
+    eng = CollectiveEngine()
+    topo = eng.calibrate(measurements={
+        "pod": _synthetic_measurements(t_r=300.0, bw=0.25),
+        "data": _synthetic_measurements(t_r=88.0, bw=1.0),
+    })
+    eng.select("allreduce", 1 << 20, 8)
+    eng.flush()
+
+    # fresh process: empty engine registry, stock default requested
+    monkeypatch.setattr(api, "_ENGINES", {})
+    restored = api.get_engine()
+    assert restored.topology == topo
+    assert not restored.topology.is_uniform
+    # the registry caches the restored engine under the stock key
+    assert api.get_engine() is restored
+
+    # env opt-out: the stock constants, calibration file ignored
+    monkeypatch.setattr(api, "_ENGINES", {})
+    monkeypatch.setenv("REPRO_RESTORE_TOPOLOGY", "0")
+    stock = api.get_engine()
+    assert stock.topology.is_uniform
+    assert stock.topology.default == TPU_V5E_AXIS
+
+    # an explicitly requested FabricTopology key is never overridden
+    monkeypatch.delenv("REPRO_RESTORE_TOPOLOGY")
+    monkeypatch.setattr(api, "_ENGINES", {})
+    explicit = FabricTopology.uniform(TPU_V5E_AXIS)
+    assert api.get_engine(explicit).topology == explicit
+
+
+def test_find_calibrated_topology_ignores_other_fabric_families(
+        tmp_path, monkeypatch):
+    """A cache written under different base constants (say WSE2) must
+    not leak into the TPU default engine."""
+    from repro.collectives.engine import find_calibrated_topology
+    from repro.core.model import WSE2
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_RESTORE_TOPOLOGY", raising=False)
+    eng = CollectiveEngine(fabric=WSE2)
+    eng.calibrate(measurements={
+        "pod": _synthetic_measurements(t_r=300.0, bw=0.25),
+        "data": _synthetic_measurements(t_r=88.0, bw=1.0),
+    })
+    eng.select("allreduce", 1 << 20, 8)
+    eng.flush()
+    assert find_calibrated_topology(base=TPU_V5E_AXIS) is None
+    assert find_calibrated_topology(base=WSE2) is not None
+
+
+def test_find_calibrated_topology_ignores_declared_specs(tmp_path,
+                                                         monkeypatch):
+    """A topology installed from a --fabric spec (declared, not
+    measured) persists with the cache but must not auto-restore into
+    unrelated processes."""
+    from repro.collectives.engine import find_calibrated_topology
+    from repro.core.model import parse_fabric_topology
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_RESTORE_TOPOLOGY", raising=False)
+    eng = CollectiveEngine(fabric=parse_fabric_topology("pod=slow"))
+    eng.select("allreduce", 1 << 20, 8)
+    eng.flush()
+    assert find_calibrated_topology(base=TPU_V5E_AXIS) is None
+
+
 def test_per_axis_calibration_rejects_noise_dominated_axis(tmp_path):
     """A flat-line (or inverted) timing fit has no bandwidth signal;
     anchoring the shared time base on its clamped slope would hand

@@ -72,7 +72,8 @@ def test_no_plan_beats_2d_lower_bound(tmp_path):
     for fabric in (TPU_V5E_AXIS, WSE2):
         eng = CollectiveEngine(fabric=fabric, persist=False)
         for sizes in ((2, 2), (2, 4), (4, 4), (2, 2, 2), (1, 8)):
-            for op in ("allreduce", "reduce_scatter", "allgather"):
+            for op in ("allreduce", "reduce_scatter", "allgather",
+                       "all_to_all"):
                 for nbytes in (512, 1 << 13, 1 << 20, 1 << 26):
                     axes = tuple(f"a{i}" for i in range(len(sizes)))
                     plan = eng.plan_multi(op, axes, sizes, nbytes)
@@ -127,6 +128,88 @@ def test_sharded_op_plans(tmp_path):
     forced = eng.plan_multi("allgather", ("pod", "data"), (2, 4),
                             1 << 20, shape="cascade")
     assert [s.axes[0] for s in forced.steps] == ["pod", "data"]
+
+
+# ------------------------------ all_to_all ---------------------------- #
+def test_a2a_candidate_set_and_shapes(tmp_path):
+    eng = _engine(tmp_path)
+    plan = eng.plan_multi("all_to_all", ("pod", "data"), (2, 4), 1 << 20)
+    assert set(plan.predictions) == {"hierarchical", "sequential",
+                                     "flat"}
+    assert plan.predicted == min(plan.predictions.values())
+    # hierarchical runs intra-pod (inner) first, then cross-pod
+    forced = eng.plan_multi("all_to_all", ("pod", "data"), (2, 4),
+                            1 << 20, shape="hierarchical")
+    assert [s.kind for s in forced.steps] == ["all_to_all", "all_to_all"]
+    assert [s.axes[0] for s in forced.steps] == ["data", "pod"]
+    assert forced.describe().startswith("hierarchical(a2a:")
+    # sequential is the naive outermost-first order of the same phases
+    seq = eng.plan_multi("all_to_all", ("pod", "data"), (2, 4), 1 << 20,
+                         shape="sequential")
+    assert [s.axes[0] for s in seq.steps] == ["pod", "data"]
+    # AllToAll conserves bytes: both orders price identically, and the
+    # argmin tie resolves to hierarchical (aggregate before crossing)
+    assert (plan.predictions["hierarchical"]
+            == pytest.approx(plan.predictions["sequential"]))
+    # a single effective axis degenerates to one sequential phase
+    one = eng.plan_multi("all_to_all", ("pod", "data"), (1, 8), 1 << 20)
+    assert one.shape == "sequential" and len(one.steps) == 1
+
+
+def test_a2a_selector_frontier(tmp_path):
+    """1D backend selection: Bruck halving (log launches) wins the
+    latency-bound region, the pairwise ring (injection-optimal) the
+    bandwidth-bound region."""
+    eng = _engine(tmp_path)
+    small = eng.select("all_to_all", 512, 8)
+    big = eng.select("all_to_all", 16 << 20, 8)
+    assert set(small.predictions) == {"ring", "halving"}
+    assert small.algorithm == "halving", small.predictions
+    assert big.algorithm == "ring", big.predictions
+
+
+def test_a2a_slow_pod_picks_hierarchical_fewer_cross_pod_bytes():
+    """Acceptance: on a pod=slow topology the joint argmin is the
+    2-phase intra-pod/inter-pod decomposition, its modeled cross-pod
+    wire bytes are strictly below the flat single-shot exchange's, and
+    every candidate respects the Theta(B*(P-1)/P) bound."""
+    eng = CollectiveEngine(fabric=parse_fabric_topology("pod=slow"),
+                           persist=False)
+    for sizes in ((2, 4), (2, 16), (4, 8)):
+        for nbytes in (1 << 16, 1 << 20, 64 << 20):
+            plan = eng.plan_multi("all_to_all", ("pod", "data"), sizes,
+                                  nbytes)
+            assert plan.shape == "hierarchical", (sizes, nbytes,
+                                                  plan.predictions)
+            hier = plan.cost_terms["hierarchical"]["axis_bytes"]["pod"]
+            flat = plan.cost_terms["flat"]["axis_bytes"]["pod"]
+            assert hier < flat, (sizes, nbytes)
+            # the cross-pod phase ships exactly B*(M-1)/M per device
+            m = sizes[0]
+            assert hier == pytest.approx(nbytes * (m - 1) / m)
+            for shape, t in plan.predictions.items():
+                assert t >= plan.lower_bound - 1e-6, (sizes, nbytes,
+                                                      shape)
+
+
+def test_a2a_lower_bound_sweep_heterogeneous():
+    """LB sweep over heterogeneous fabrics: no candidate shape of any
+    topology/byte-size combination undercuts the injection bound (the
+    planner raises on violation; this exercises it broadly)."""
+    topos = (parse_fabric_topology("pod=slow"),
+             parse_fabric_topology("pod=slow,data=0.5"),
+             parse_fabric_topology("pod=dcn"),
+             _slow_pod_topology(16.0))
+    for topo in topos:
+        eng = CollectiveEngine(fabric=topo, persist=False)
+        for sizes in ((2, 2), (2, 8), (4, 4), (2, 2, 2)):
+            axes = ("pod", "data", "model")[:len(sizes)]
+            for nbytes in (512, 1 << 16, 1 << 24):
+                plan = eng.plan_multi("all_to_all", axes, sizes, nbytes)
+                assert plan.lower_bound > 0.0
+                for shape, t in plan.predictions.items():
+                    assert t >= plan.lower_bound - 1e-6, (
+                        topo.describe(), sizes, nbytes, shape)
 
 
 # --------------------------- cache behavior --------------------------- #

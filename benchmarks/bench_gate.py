@@ -1,0 +1,122 @@
+"""Aggregate perf gate: diff every BENCH artifact against its committed
+baseline, report every regression, exit nonzero once at the end.
+
+The previous CI step chained ``bench_diff.py`` invocations in one shell
+block, so the first failing diff skipped the remaining ones and a PR
+author saw only a fraction of the regressions.  This driver runs the
+whole manifest unconditionally::
+
+    python benchmarks/bench_gate.py              # gate (CI)
+    python benchmarks/bench_gate.py --refresh    # rewrite baselines
+
+Gate semantics per pair mirror ``bench_diff``: exit 1 if any baseline
+regressed, exit 2 if any pair was broken (missing files / no gated
+counters) -- regressions win when both occur.  A missing *current*
+BENCH file fails the gate: a bench that silently stopped running is a
+trajectory going dark, exactly what the gate exists to catch.
+
+``--refresh`` copies each existing current file over its baseline and
+prints a per-pair summary of gated-counter changes (used by the
+``baseline-refresh`` workflow, which uploads the result as an
+artifact); missing current files are reported and skipped, and the exit
+code stays 0 unless nothing at all was refreshed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import List, Tuple
+
+from benchmarks import bench_diff
+
+#: (current BENCH artifact, committed baseline) pairs the gate covers.
+PAIRS: Tuple[Tuple[str, str], ...] = (
+    ("BENCH_grad_sync.json", "benchmarks/baselines/grad_sync_small.json"),
+    ("BENCH_moe_ep.json", "benchmarks/baselines/moe_ep_small.json"),
+    ("BENCH_serve.json", "benchmarks/baselines/serve.json"),
+    ("BENCH_pipeline.json", "benchmarks/baselines/pipeline_small.json"),
+)
+
+
+def _gate(pairs, tolerance: float) -> int:
+    codes: List[Tuple[str, int]] = []
+    for current, baseline in pairs:
+        print(f"== bench_gate: {current} vs {baseline}")
+        if not os.path.exists(current):
+            print(f"bench_gate: {current} missing -- the bench did not "
+                  f"run", file=sys.stderr)
+            codes.append((current, 2))
+            continue
+        if not os.path.exists(baseline):
+            print(f"bench_gate: {baseline} missing -- commit one (run "
+                  f"with --refresh) to gate {current}", file=sys.stderr)
+            codes.append((current, 2))
+            continue
+        rc = bench_diff.main([current, "--baseline", baseline,
+                              "--tolerance", str(tolerance)])
+        codes.append((current, rc))
+    failed = [(c, rc) for c, rc in codes if rc != 0]
+    print(f"== bench_gate: {len(codes) - len(failed)}/{len(codes)} "
+          f"pairs clean")
+    for current, rc in failed:
+        kind = "regressed" if rc == 1 else "broken"
+        print(f"==   {kind}: {current}", file=sys.stderr)
+    if any(rc == 1 for _, rc in failed):
+        return 1
+    return 2 if failed else 0
+
+
+def _count_gated(blob) -> int:
+    return sum(1 for _ in bench_diff._walk(blob, blob))
+
+
+def _refresh(pairs) -> int:
+    refreshed = 0
+    for current, baseline in pairs:
+        if not os.path.exists(current):
+            print(f"# skip {baseline}: {current} not present")
+            continue
+        with open(current) as f:
+            cur = json.load(f)
+        old_n, regressions = 0, []
+        if os.path.exists(baseline):
+            with open(baseline) as f:
+                old = json.load(f)
+            old_n = _count_gated(old)
+            regressions, _ = bench_diff.diff(old, cur, tolerance=0.0)
+        news = list(bench_diff.new_metrics(
+            old if old_n else {}, cur))
+        shutil.copyfile(current, baseline)
+        refreshed += 1
+        print(f"# refreshed {baseline}: {_count_gated(cur)} gated "
+              f"counters ({old_n} before, {len(news)} new, "
+              f"{len(regressions)} moved)")
+        for msg in regressions:
+            print(f"#   moved {msg}")
+        for path in news:
+            print(f"#   new {path}")
+    if refreshed == 0:
+        print("bench_gate --refresh: nothing refreshed", file=sys.stderr)
+        return 2
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative regression allowed (default 0.10)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="copy current BENCH files over the baselines "
+                         "and print a diff summary instead of gating")
+    args = ap.parse_args(argv)
+    if args.refresh:
+        return _refresh(PAIRS)
+    return _gate(PAIRS, args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,6 @@ Cycle counts convert to wall time at the CS-2 clock (850 MHz, Sec. 8.1):
 
 from __future__ import annotations
 
-import sys
 import time
 
 CLOCK_MHZ = 850.0

@@ -10,8 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.autogen import compute_tables
-from repro.simulator.runner import (compare_allreduce, compare_broadcast,
-                                    compare_reduce)
+from repro.simulator.runner import compare_allreduce, compare_reduce
 from benchmarks.common import cycles_to_us, emit
 
 B = 256  # 1 KB of f32

@@ -9,7 +9,6 @@ can be refreshed after every sweep.)
 
 from __future__ import annotations
 
-import json
 
 from benchmarks import roofline_report
 

@@ -99,9 +99,19 @@ print("JSON" + json.dumps(results))
 """
 
 BIG_VARIANTS = ("psum_flat", "psum_hier", "two_phase", "ring", "tree",
-                "sequential", "hierarchical", "flat", "auto")
-SMALL_VARIANTS = ("psum_flat", "sequential", "hierarchical", "2d_xy",
-                  "2d_snake", "flat", "auto")
+                "sequential", "hierarchical", "hierarchical_pipelined",
+                "flat", "auto")
+SMALL_VARIANTS = ("psum_flat", "sequential", "hierarchical",
+                  "sequential_pipelined", "hierarchical_pipelined",
+                  "2d_xy", "2d_snake", "flat", "auto")
+
+PLAN_SHAPES = ("sequential", "hierarchical", "2d_xy", "2d_snake",
+               "flat", "sequential_pipelined", "hierarchical_pipelined")
+
+
+def _base(shape: str) -> str:
+    suffix = "_pipelined"
+    return shape[:-len(suffix)] if shape.endswith(suffix) else shape
 
 
 def _model_plans(pod: int, data: int, bucket_sizes,
@@ -122,6 +132,7 @@ def _model_plans(pod: int, data: int, bucket_sizes,
                               nbytes)
         out[str(nbytes)] = {
             "plan": plan.describe(),
+            "n_chunks": plan.n_chunks,
             "predictions": plan.predictions,
             "lower_bound": plan.lower_bound,
             "axis_bytes": {shape: entry["axis_bytes"]
@@ -145,8 +156,7 @@ def run(small: bool = False, verbose: bool = True,
         "devices": devices, "mesh_shape": mesh_shape,
         "mesh_axes": mesh_axes, "bucket_sizes": list(bucket_sizes),
         "variants": list(variants), "fabric_spec": fabric_spec,
-        "plan_shapes": ["sequential", "hierarchical", "2d_xy",
-                        "2d_snake", "flat"],
+        "plan_shapes": list(PLAN_SHAPES),
     }
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
@@ -204,9 +214,10 @@ def check(results):
         assert (per["auto"]["bytes_per_dev"]
                 == per[best]["bytes_per_dev"]), (nbytes, best)
         # a slow cross-pod link must drive the joint argmin to the
-        # hierarchical composition at bandwidth-bound bucket sizes
+        # hierarchical composition (chunk-pipelined or not) at
+        # bandwidth-bound bucket sizes
         if hetero and int(nbytes) >= 1 << 20:
-            assert best == "hierarchical", (nbytes, best)
+            assert _base(best) == "hierarchical", (nbytes, best)
     if not hetero:
         assert results["selector_choice"]["data_axis"] == "ring"
 

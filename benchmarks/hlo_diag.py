@@ -21,7 +21,6 @@ from collections import defaultdict
 def diagnose(arch: str, shape_name: str, mesh_kind: str = "pod",
              units: int = 1, top: int = 15, microbatches: int = 1,
              fsdp: bool = True, remat: bool = True):
-    import jax
     from repro.configs import get_config, SHAPES, base
     from repro.launch.dryrun import _lower_cell
     from repro.launch.mesh import make_production_mesh

@@ -6,8 +6,9 @@ Two measurement layers, both from compiled per-device HLO:
 
 * **a2a sweep** -- one dispatch-shaped exchange per payload size and
   backend (``lax`` single-shot, the planner shapes ``flat`` /
-  ``sequential`` / ``hierarchical``, and ``auto``): collective
-  bytes/device + op count (sequential-depth proxy).
+  ``sequential`` / ``hierarchical`` plus their chunk-pipelined
+  variants, and ``auto``): collective bytes/device + op count
+  (sequential-depth proxy).
 * **moe_forward** -- a full ``moe_ffn_ep`` forward (dispatch + combine)
   under the bare-lax and engine paths.
 
@@ -70,7 +71,9 @@ for nbytes in %(payload_sizes)s:
     n -= n %% P_WORLD
     x = jax.ShapeDtypeStruct((n,), jnp.float32)
     per = {}
-    for name in ("lax", "flat", "sequential", "hierarchical", "auto"):
+    for name in ("lax", "flat", "sequential", "hierarchical",
+                 "sequential_pipelined", "hierarchical_pipelined",
+                 "auto"):
         per[name] = compiled_counters(
             functools.partial(all_to_all_multi_inside, axes=AXES,
                               algorithm=name), x)
@@ -116,6 +119,7 @@ def _model_plans(payload_sizes, fabric_spec: str | None = None):
                               nbytes)
         out[str(nbytes)] = {
             "plan": plan.describe(),
+            "n_chunks": plan.n_chunks,
             "predictions": plan.predictions,
             "lower_bound": plan.lower_bound,
             "axis_bytes": {shape: entry["axis_bytes"]
@@ -178,8 +182,11 @@ def check(results):
                 == per[best]["bytes_per_dev"]), (nbytes, best)
         # a slow cross-pod link must keep the argmin on the
         # hierarchical intra-pod/inter-pod decomposition
+        # (chunk-pipelined or not)
         if hetero:
-            assert best == "hierarchical", (nbytes, best)
+            base = (best[:-len("_pipelined")]
+                    if best.endswith("_pipelined") else best)
+            assert base == "hierarchical", (nbytes, best)
     # the engine forward exchanges no more wire bytes than bare lax
     # (same B per device; the engine path may add ops, not volume);
     # generous 2x headroom keeps CPU-backend HLO layout noise out

@@ -8,11 +8,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import patterns as pat
-from repro.core.autogen import autogen_tree, compute_tables
+from repro.core.autogen import compute_tables
 from repro.core.schedule import (binary_tree, chain_tree, star_tree,
                                  two_phase_tree)
 from repro.simulator.fabric import simulate_reduce_fabric
-from repro.simulator.flow import simulate_reduce_tree
 from repro.simulator.runner import compare_reduce
 from benchmarks.common import emit
 

@@ -5,13 +5,10 @@ Run:  PYTHONPATH=src python examples/train_100m.py  [--steps 200]
 """
 
 import argparse
-import dataclasses
 import tempfile
 
-import jax
 
 from repro.configs.base import ArchConfig
-from repro.launch import train as train_driver
 from repro.configs import get_config
 
 

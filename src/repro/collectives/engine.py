@@ -53,7 +53,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.autogen import autogen_tree, cache_dir, compute_tables
 from repro.core.model import (Fabric, FabricTopology, TPU_V5E_AXIS,
-                              as_topology)
+                              as_topology, ceil_div)
 from repro.core import selector
 from repro.collectives import planner
 from repro.collectives import shardmap_impl as impl
@@ -61,9 +61,10 @@ from repro.collectives import shardmap_impl as impl
 #: one model "element" on the TPU fabric (512-byte flit group)
 ICI_ELEMENT_BYTES = 512
 
-#: bump when the cost model changes (patterns/selector) so persisted
-#: decisions computed under the old model stop being served
-MODEL_VERSION = 1
+#: bump when the cost model changes (patterns/selector/planner) so
+#: persisted decisions computed under the old model stop being served.
+#: v2: chunk-pipelined plan candidates + overlap-aware lower bounds.
+MODEL_VERSION = 2
 
 #: persisted-file layout version.  v2 keys decisions by the full
 #: topology signature (``op|t=2x8|B=...``) instead of the bare axis size
@@ -828,15 +829,73 @@ class CollectiveEngine:
         perm = tuple(reversed(range(k))) + tuple(range(k, blocks.ndim))
         return blocks.transpose(perm).reshape(x.shape)
 
+    # ------------------------------------------------------------------ #
+    # chunked phase-runner: one wavefront executor for every plan
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _run_phases(chunks: List[jax.Array],
+                    phase_fns: Sequence[Callable[[jax.Array], jax.Array]]
+                    ) -> List[jax.Array]:
+        """Execute ``phase_fns`` over payload ``chunks`` as a wavefront
+        pipeline: in wave ``w``, chunk ``k`` runs phase ``w - k`` -- so
+        chunk 0's outer (cross-pod) phase is issued alongside chunk 1's
+        inner phase, and phases on disjoint link classes overlap.  The
+        chunks are data-independent, so nothing in the emitted program
+        orders one chunk's phase after another chunk's; the compiler is
+        free to run them concurrently.  With a single chunk this
+        degenerates to running the phases back-to-back -- the
+        serialized plan executor, shared by every plan shape."""
+        chunks = list(chunks)
+        n = len(phase_fns)
+        for wave in range(n + len(chunks) - 1):
+            for k in range(len(chunks)):
+                r = wave - k
+                if 0 <= r < n:
+                    chunks[k] = phase_fns[r](chunks[k])
+        return chunks
+
+    @staticmethod
+    def _split_row_chunks(x: jax.Array, p: int, c: int
+                          ) -> Tuple[List[jax.Array], int]:
+        """Slice ``x`` ([p*m, ...], p row-major device blocks) into
+        ``c`` chunks of ``[p*mc, ...]``, chunk ``k`` carrying rows
+        ``[k*mc, (k+1)*mc)`` of every device block (zero-padded when
+        ``c`` does not divide m).  Returns the chunks and m."""
+        m = x.shape[0] // p
+        mc = ceil_div(m, c)
+        blocks = x.reshape((p, m) + x.shape[1:])
+        pad = c * mc - m
+        if pad:
+            widths = [(0, 0)] * blocks.ndim
+            widths[1] = (0, pad)
+            blocks = jnp.pad(blocks, widths)
+        return [blocks[:, k * mc:(k + 1) * mc].reshape(
+                    (p * mc,) + x.shape[1:])
+                for k in range(c)], m
+
+    @staticmethod
+    def _join_row_chunks(chunks: List[jax.Array], p: int, m: int
+                         ) -> jax.Array:
+        """Inverse of :meth:`_split_row_chunks` on the output side:
+        chunk ``k`` holds rows ``[k*mc, (k+1)*mc)`` of every device
+        block of the [p*m, ...] result (pad rows dropped)."""
+        mc = chunks[0].shape[0] // p
+        trailing = chunks[0].shape[1:]
+        parts = [ch.reshape((p, mc) + trailing) for ch in chunks]
+        out = jnp.concatenate(parts, axis=1)[:, :m]
+        return out.reshape((p * m,) + trailing)
+
     def allreduce_multi(self, x: jax.Array, axes: Sequence[str],
                         algorithm: str = "auto") -> jax.Array:
         """AllReduce over an axis tuple through a joint topology plan.
 
         ``algorithm`` is either ``"auto"`` (planner argmin), a plan
         shape (``"sequential" | "hierarchical" | "2d_xy" | "2d_snake" |
-        "flat"``), ``"psum"`` (XLA native over the folded axes), or a
-        1D backend name, which forces the sequential shape with that
-        backend on every axis (the legacy per-axis loop).
+        "flat"`` or a ``*_pipelined`` variant, executed chunked over
+        ``plan.n_chunks`` payload slices), ``"psum"`` (XLA native over
+        the folded axes), or a 1D backend name, which forces the
+        sequential shape with that backend on every axis (the legacy
+        per-axis loop).
         """
         axes = tuple(axes)
         if len(axes) == 1:
@@ -871,29 +930,58 @@ class CollectiveEngine:
         if plan.shape == "flat":
             (step,) = plan.steps
             return self.allreduce_inside(x, step.axes, step.algorithm)
-        if plan.shape == "sequential":
-            for step in plan.steps:
-                x = self.allreduce_inside(x, step.axes[0], step.algorithm)
-            return x
-        if plan.shape == "hierarchical":
-            rs, mid, ag = plan.steps
-            inner = rs.axes[0]
-            p_in = impl._axis_size(inner)
-            shape0 = x.shape
-            flat = x.reshape(-1)
-            pad = (-flat.size) % p_in
+        base = planner.base_shape(plan.shape)
+        if base not in ("sequential", "hierarchical"):
+            raise ValueError(f"unknown plan shape {plan.shape!r}")
+        shape0 = x.shape
+        flat = x.reshape(-1)
+        n = flat.size
+        c = max(1, plan.n_chunks)
+        chunk_len = ceil_div(n, c)
+        pad = c * chunk_len - n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        chunks = [flat[k * chunk_len:(k + 1) * chunk_len]
+                  for k in range(c)]
+        fns = self._allreduce_phase_fns(plan, base, chunk_len)
+        chunks = self._run_phases(chunks, fns)
+        out = jnp.concatenate(chunks) if c > 1 else chunks[0]
+        if pad:
+            out = out[:n]
+        return out.reshape(shape0)
+
+    def _allreduce_phase_fns(self, plan: "planner.CollectivePlan",
+                             base: str, chunk_len: int
+                             ) -> List[Callable[[jax.Array], jax.Array]]:
+        """Per-phase closures mapping a flat ``[chunk_len]`` slice to
+        its reduced ``[chunk_len]`` -- the executable form of a
+        sequential or hierarchical allreduce plan, fed to
+        :meth:`_run_phases`."""
+        if base == "sequential":
+            return [
+                (lambda v, s=step: self.allreduce_inside(
+                    v, s.axes[0], s.algorithm))
+                for step in plan.steps]
+        rs, mid, ag = plan.steps
+        inner = rs.axes[0]
+        p_in = impl._axis_size(inner)
+        pad = (-chunk_len) % p_in
+
+        def f_rs(v):
             if pad:
-                flat = jnp.pad(flat, (0, pad))
-            shard = self.reduce_scatter_inside(flat, inner,
-                                               algorithm=rs.algorithm)
-            shard = self.allreduce_multi(shard, mid.axes,
-                                         algorithm=mid.algorithm)
-            full = self.allgather_inside(shard, inner,
-                                         algorithm=ag.algorithm)
-            if pad:
-                full = full[:-pad]
-            return full.reshape(shape0)
-        raise ValueError(f"unknown plan shape {plan.shape!r}")
+                v = jnp.pad(v, (0, pad))
+            return self.reduce_scatter_inside(v, inner,
+                                              algorithm=rs.algorithm)
+
+        def f_mid(v):
+            return self.allreduce_multi(v, mid.axes,
+                                        algorithm=mid.algorithm)
+
+        def f_ag(v):
+            v = self.allgather_inside(v, inner, algorithm=ag.algorithm)
+            return v[:chunk_len] if pad else v
+
+        return [f_rs, f_mid, f_ag]
 
     def reduce_scatter_multi(self, x: jax.Array, axes: Sequence[str],
                              algorithm: str = "auto") -> jax.Array:
@@ -922,12 +1010,24 @@ class CollectiveEngine:
             return self.reduce_scatter_inside(x, step.axes,
                                               step.algorithm)
         # cascade: pre-permute chunks so the innermost-first shrink
-        # lands each device on its psum_scatter chunk
-        x = self._chunk_transpose(x, sizes)
-        for step in plan.steps:
-            x = self.reduce_scatter_inside(x, step.axes[0],
-                                           step.algorithm)
-        return x
+        # lands each device on its psum_scatter chunk; a pipelined plan
+        # slices each device block's rows and wavefronts the phases
+        steps = plan.steps
+
+        def f0(v, s=steps[0]):
+            return self.reduce_scatter_inside(
+                self._chunk_transpose(v, sizes), s.axes[0], s.algorithm)
+
+        fns = [f0] + [
+            (lambda v, s=step: self.reduce_scatter_inside(
+                v, s.axes[0], s.algorithm))
+            for step in steps[1:]]
+        c = max(1, plan.n_chunks)
+        if c == 1:
+            return self._run_phases([x], fns)[0]
+        chunks, m = self._split_row_chunks(x, p, c)
+        chunks = self._run_phases(chunks, fns)
+        return jnp.concatenate(chunks, axis=0)[:m]
 
     def allgather_multi(self, x: jax.Array, axes: Sequence[str],
                         algorithm: str = "auto") -> jax.Array:
@@ -953,10 +1053,33 @@ class CollectiveEngine:
             (step,) = plan.steps
             return self.allgather_inside(x, step.axes, step.algorithm)
         # cascade: outermost-first growth, then undo the chunk
-        # permutation the matching reduce-scatter cascade applied
-        for step in plan.steps:
-            x = self.allgather_inside(x, step.axes[0], step.algorithm)
-        return self._chunk_transpose(x, tuple(reversed(sizes)))
+        # permutation the matching reduce-scatter cascade applied; a
+        # pipelined plan slices the shard's rows and wavefronts
+        steps = plan.steps
+
+        def f_last(v, s=steps[-1]):
+            return self._chunk_transpose(
+                self.allgather_inside(v, s.axes[0], s.algorithm),
+                tuple(reversed(sizes)))
+
+        fns = [
+            (lambda v, s=step: self.allgather_inside(
+                v, s.axes[0], s.algorithm))
+            for step in steps[:-1]] + [f_last]
+        c = max(1, plan.n_chunks)
+        if c == 1:
+            return self._run_phases([x], fns)[0]
+        s_len = x.shape[0]
+        sc = ceil_div(s_len, c)
+        pad = c * sc - s_len
+        xp = x
+        if pad:
+            widths = [(0, 0)] * x.ndim
+            widths[0] = (0, pad)
+            xp = jnp.pad(x, widths)
+        chunks = [xp[k * sc:(k + 1) * sc] for k in range(c)]
+        chunks = self._run_phases(chunks, fns)
+        return self._join_row_chunks(chunks, p, s_len)
 
     def all_to_all_multi(self, x: jax.Array, axes: Sequence[str],
                          algorithm: str = "auto") -> jax.Array:
@@ -965,8 +1088,10 @@ class CollectiveEngine:
         semantics over the row-major-folded axes).
 
         ``algorithm`` is ``"auto"`` (planner argmin), a plan shape
-        (``"hierarchical" | "sequential" | "flat"``), ``"lax"`` (XLA
-        native single-shot over the folded axes), or a 1D backend name
+        (``"hierarchical" | "sequential" | "flat"`` or a
+        ``*_pipelined`` variant, executed chunked over
+        ``plan.n_chunks`` payload slices), ``"lax"`` (XLA native
+        single-shot over the folded axes), or a 1D backend name
         (``ring``/``halving``), which forces the hierarchical
         (innermost-first) phase order with that backend on every axis.
         """
@@ -995,16 +1120,54 @@ class CollectiveEngine:
                 (step,) = plan.steps
                 return self.all_to_all_inside(x, step.axes,
                                               step.algorithm)
-            return self._run_a2a_phases(x, axes, sizes, plan.steps)
+            return self._run_a2a_phases(x, axes, sizes, plan.steps,
+                                        plan.n_chunks)
         # legacy: explicit 1D backend on every axis, innermost first
         steps = tuple(
             planner.PlanStep("all_to_all", (a,), algorithm, nbytes)
             for a, s in zip(reversed(axes), reversed(sizes)) if s > 1)
         return self._run_a2a_phases(x, axes, sizes, steps)
 
+    def _a2a_phase_fns(self, axes: Tuple[str, ...],
+                       sizes: Tuple[int, ...],
+                       steps: Sequence["planner.PlanStep"]
+                       ) -> List[Callable[[jax.Array], jax.Array]]:
+        """Per-phase closures over the block grid.  Each closure views
+        its input's leading dim as a ``sizes``-shaped grid of blocks
+        and exchanges along block dim *i* only, turning that
+        destination coordinate into the source coordinate in place --
+        self-contained per step, so any chunk size divisible into the
+        grid runs the same way."""
+        k = len(sizes)
+        p = 1
+        for s in sizes:
+            p *= s
+
+        def make(step):
+            i = axes.index(step.axes[0])
+            perm = ((i,) + tuple(j for j in range(k) if j != i))
+            inv = tuple(int(j) for j in np.argsort(perm))
+
+            def fn(v):
+                m = v.shape[0] // p
+                blocks = v.reshape(tuple(sizes) + (m,) + v.shape[1:])
+                full_perm = perm + tuple(range(k, blocks.ndim))
+                t = blocks.transpose(full_perm)
+                flat = t.reshape((-1,) + v.shape[1:])
+                out = self.all_to_all_inside(flat, step.axes[0],
+                                             algorithm=step.algorithm)
+                full_inv = inv + tuple(range(k, blocks.ndim))
+                return out.reshape(t.shape).transpose(full_inv).reshape(
+                    v.shape)
+
+            return fn
+
+        return [make(step) for step in steps]
+
     def _run_a2a_phases(self, x: jax.Array, axes: Tuple[str, ...],
                         sizes: Tuple[int, ...],
-                        steps: Sequence["planner.PlanStep"]) -> jax.Array:
+                        steps: Sequence["planner.PlanStep"],
+                        n_chunks: int = 1) -> jax.Array:
         """Execute per-axis all-to-all phases over the block grid.
 
         The leading dim is viewed as a ``sizes``-shaped grid of blocks
@@ -1012,25 +1175,19 @@ class CollectiveEngine:
         dim *i* only, turning that destination coordinate into the
         source coordinate in place -- so after every effective axis has
         run once (any order), the block grid is source-major row-major,
-        exactly ``lax.all_to_all`` over the folded tuple."""
-        k = len(sizes)
+        exactly ``lax.all_to_all`` over the folded tuple.  With
+        ``n_chunks > 1`` each block contributes a row slice per chunk
+        and the phases run as a wavefront pipeline."""
+        fns = self._a2a_phase_fns(axes, sizes, steps)
+        c = max(1, n_chunks)
+        if c == 1:
+            return self._run_phases([x], fns)[0]
         p = 1
         for s in sizes:
             p *= s
-        m = x.shape[0] // p
-        blocks = x.reshape(tuple(sizes) + (m,) + x.shape[1:])
-        for step in steps:
-            i = axes.index(step.axes[0])
-            perm = ((i,) + tuple(j for j in range(k) if j != i)
-                    + tuple(range(k, blocks.ndim)))
-            t = blocks.transpose(perm)
-            t_shape = t.shape
-            flat = t.reshape((-1,) + x.shape[1:])
-            out = self.all_to_all_inside(flat, step.axes[0],
-                                         algorithm=step.algorithm)
-            inv = tuple(int(j) for j in np.argsort(perm))
-            blocks = out.reshape(t_shape).transpose(inv)
-        return blocks.reshape(x.shape)
+        chunks, m = self._split_row_chunks(x, p, c)
+        chunks = self._run_phases(chunks, fns)
+        return self._join_row_chunks(chunks, p, m)
 
     # ------------------------------------------------------------------ #
     # outer wrappers: build the shard_map for replicated operands

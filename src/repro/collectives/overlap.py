@@ -18,13 +18,17 @@ the data/pod axes):
   jointly scores the paper's 2D patterns (xy/snake over the folded
   grid), the hierarchical RS -> AR -> AG composition (cross-pod phase
   on 1/P of the bytes), the flat folded ring, and the legacy
-  per-axis sequential loop -- and runs the winner.
+  per-axis sequential loop -- and runs the winner.  On heterogeneous
+  fabrics the winning plan is often a ``*_pipelined`` variant: the
+  engine then splits the bucket into ``plan.n_chunks`` slices and
+  wavefronts the phases so one chunk's slow inter-pod phase overlaps
+  the next chunk's fast inner phase (chunk count chosen by the
+  planner's closed form; tiny buckets fall back to serial phases).
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +37,6 @@ from jax.experimental.shard_map import shard_map
 
 from repro.collectives.api import get_engine
 from repro.collectives.engine import CollectiveEngine
-from repro.core.model import TPU_V5E_AXIS
 
 DEFAULT_BUCKET_BYTES = 32 * 1024 * 1024
 

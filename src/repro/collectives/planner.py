@@ -22,6 +22,21 @@ implemented multi-axis composition under Eq. (1):
 * ``flat``         -- the best 1D algorithm over the axes folded into a
   single logical axis (row-major), the ``psum((a, b))`` shape.
 
+Every multi-phase shape additionally grows a ``<shape>_pipelined``
+candidate: the payload is sliced into ``n_chunks`` pieces and the
+phases run as a wavefront, so a chunk's slow outer (cross-pod) phase
+overlaps the next chunk's fast inner phase.  Phases are grouped into
+*link classes* (the axes whose wires they occupy); only phases on
+disjoint classes overlap, so the closed form is
+
+    T_pipe(C) = sum_i t_i(B/C) + (C - 1) * max_class sum_cls t_i(B/C)
+
+with the chunk count C chosen by the model from
+:data:`PIPELINE_CHUNK_CANDIDATES`.  Per-phase launch overhead is inside
+every chunk-sized ``t_i``, so small payloads fall back to the
+serialized shapes on their own; ``cost_terms`` report the chosen
+``n_chunks`` and the modeled ``overlap_saved`` vs the base shape.
+
 Per-axis candidates inside each shape are priced through the engine's
 ``select`` (so their decisions share the persistent cache), the joint
 winner is validated against the paper's 2D lower bound
@@ -33,15 +48,18 @@ fewer cross-pod bytes" an assertable fact rather than folklore.
 ``reduce_scatter`` / ``allgather`` plans use the ``cascade`` shape
 (per-axis halves, chunk-transposed so the output layout matches
 ``lax.psum_scatter(..., tiled=True)`` over the folded axes) and the
-``flat`` shape; their lower bound instantiates Lemma 7.2 at the
-``B * (P-1)/P`` bytes every device must minimally move.
+``flat`` shape; their lower bound takes the max over link classes of
+Lemma 7.2's volume branch at the ``B * (p_ax-1)/P`` bytes that must
+cross each axis's links (a bound that stays valid when phases on
+disjoint axes overlap).
 
 ``all_to_all`` plans (the EP dispatch traffic class) use
 ``hierarchical`` (2-phase intra-pod/inter-pod: innermost axis first,
 aggregating cross-pod traffic before it hits the slow links),
 ``sequential`` (outermost-first), and ``flat`` (single-shot over the
-folded axis); every candidate validates against the Theta(B*(P-1)/P)
-injection bound (``core.lowerbound.t_all_to_all_lower_bound``).
+folded axis); every candidate validates against the per-axis injection
+bound (``core.lowerbound.t_all_to_all_lower_bound`` maxed over link
+classes -- again overlap-proof).
 
 Plans are positional (axis *sizes*, not names) so the engine can cache
 them under the topology signature ``(op, axis_sizes, bytes, fabric)``
@@ -61,11 +79,19 @@ from repro.core.selector import t_broadcast_2d_fabric
 
 #: shapes a multi-axis allreduce plan may take
 ALLREDUCE_SHAPES = ("sequential", "hierarchical", "2d_xy", "2d_snake",
-                    "flat")
+                    "flat", "sequential_pipelined",
+                    "hierarchical_pipelined")
 #: shapes a multi-axis reduce_scatter / allgather plan may take
-SHARDED_SHAPES = ("cascade", "flat")
+SHARDED_SHAPES = ("cascade", "flat", "cascade_pipelined")
 #: shapes a multi-axis all_to_all plan may take
-ALL_TO_ALL_SHAPES = ("hierarchical", "sequential", "flat")
+ALL_TO_ALL_SHAPES = ("hierarchical", "sequential", "flat",
+                     "hierarchical_pipelined", "sequential_pipelined")
+
+#: chunk counts a ``*_pipelined`` candidate considers; the model keeps
+#: the argmin (more chunks amortize the slow phase better, but every
+#: chunk pays the full per-phase launch/depth overhead, so tiny payloads
+#: price out of pipelining on their own)
+PIPELINE_CHUNK_CANDIDATES = (2, 4, 8)
 
 #: the engine's select() viewed from the planner:
 #: (op, nbytes, p, topo=None, fabric=None) -- ``fabric`` carries the
@@ -73,6 +99,19 @@ ALL_TO_ALL_SHAPES = ("hierarchical", "sequential", "flat")
 SelectFn = Callable[..., Any]
 
 AxisFabrics = Tuple[Fabric, ...]
+
+#: per-phase ``(modeled time, link-class axis indices)`` -- the link
+#: class identifies which axes' wires a phase occupies, so the pipelined
+#: pricer knows which phases can genuinely overlap (disjoint classes)
+#: and which serialize on shared links (same class)
+PhaseList = List[Tuple[float, Tuple[int, ...]]]
+
+
+def base_shape(shape: str) -> str:
+    """``"hierarchical_pipelined" -> "hierarchical"``; serialized shapes
+    map to themselves."""
+    suffix = "_pipelined"
+    return shape[:-len(suffix)] if shape.endswith(suffix) else shape
 
 
 def _axis_fabrics(sizes: Sequence[int], fabric: Fabric,
@@ -130,8 +169,13 @@ class CollectivePlan:
     where ``axis_bytes[ax]`` sums, over the shape's phases on that axis,
     ``phase_bytes * (p - 1) / p`` (doubled for allreduce phases, which
     run both a reduce-scatter-like and an allgather-like half).
-    ``lower_bound`` is the 2D bound the chosen plan was validated
-    against.
+    ``lower_bound`` is the overlap-aware bound the chosen plan was
+    validated against.  ``n_chunks`` is how many payload slices the
+    engine pipelines the phases over (1 for serialized shapes);
+    ``*_pipelined`` entries in ``cost_terms`` additionally carry
+    ``n_chunks`` and ``overlap_saved`` (modeled cycles recovered vs the
+    phase-sequential base shape -- negative when pipelining would
+    lose).
     """
 
     op: str
@@ -144,6 +188,7 @@ class CollectivePlan:
     predictions: Dict[str, float]
     cost_terms: Dict[str, Dict[str, Any]]
     lower_bound: float
+    n_chunks: int = 1
 
     def describe(self) -> str:
         """Compact human-readable plan shape, e.g.
@@ -153,6 +198,8 @@ class CollectivePlan:
         inner = "->".join(
             f"{_KIND_ABBREV.get(s.kind, s.kind)}:{s.algorithm}"
             for s in self.steps)
+        if self.n_chunks > 1:
+            return f"{self.shape}({inner})[chunks={self.n_chunks}]"
         return f"{self.shape}({inner})"
 
 
@@ -185,38 +232,74 @@ def _fold_2d(sizes: Sequence[int]) -> Tuple[int, int]:
     return (m, n)
 
 
+def _class_bound_fabric(ax_fab: Fabric, eff_fabs: Sequence[Fabric]
+                        ) -> Fabric:
+    """Constants for a per-link-class bound term: the class's own
+    bandwidth (its wire volume cannot ride any other class's links) but
+    latency constants no slower than any effective axis's, so the term
+    stays below every candidate regardless of which axis's launch
+    constants a phase happens to pay.  Uniform input returns the shared
+    object (bit-for-bit the single-fabric term)."""
+    if all(f == ax_fab for f in eff_fabs):
+        return ax_fab
+    return Fabric(name="lb_class",
+                  t_r=min(f.t_r for f in eff_fabs),
+                  store_cost=min(f.store_cost for f in eff_fabs),
+                  link_bw=ax_fab.link_bw,
+                  multicast=any(f.multicast for f in eff_fabs))
+
+
 def lower_bound_multi(op: str, sizes: Sequence[int], nbytes: int,
                       fabric: Fabric, element_bytes: int,
                       axis_fabrics: Optional[Sequence[Fabric]] = None
                       ) -> float:
-    """Lemma 7.2 instantiated for the folded topology and the op's
-    minimal per-device volume.
+    """Overlap-aware lower bound for the folded topology and the op's
+    minimal per-link-class volume.
 
-    AllReduce carries the full lemma: the root must absorb the whole
+    AllReduce carries full Lemma 7.2: the root must absorb the whole
     B-vector after it crossed the grid, so both the volume and the
-    ``M + N - 1`` traversal branches bind.  A reduce-scatter /
-    allgather only guarantees that every device moves ``B * (P-1)/P``
-    elements with no reduce-to-root path, so the bound degenerates to
-    the volume branch -- ``t_lower_bound_2d`` on a 1 x 1 grid at that
-    volume.  On a heterogeneous topology the bound is instantiated with
-    constants no slower than any effective axis's, so it stays below
-    every per-axis-priced candidate."""
+    ``M + N - 1`` traversal branches bind -- a store-bandwidth argument
+    that survives arbitrary phase overlap.  The other ops admit
+    genuinely concurrent per-axis phases (disjoint link classes), so a
+    serialized sum of per-axis terms is *not* a valid bound for them;
+    instead each axis's links are bounded independently and the max
+    taken:
+
+    * ``all_to_all`` -- every device's ``B * (p_ax-1)/p_ax`` bytes
+      destined for other ``ax``-slices must cross ``ax`` links
+      (pre-aggregation cannot shrink a personalized exchange), so each
+      axis carries the 1D injection bound at the full B.
+    * ``reduce_scatter`` / ``allgather`` -- of the ``B``-sized result,
+      the outputs owned by one ``ax``-slice need contributions from the
+      other ``p_ax - 1`` slices; maximally pre-reduced that is still
+      ``B * (p_ax-1) / P`` bytes into (out of) each device over ``ax``
+      links -- Lemma 7.2's volume branch at that volume.
+
+    Each per-class term is instantiated with that axis's bandwidth but
+    latency constants no slower than any effective axis's
+    (:func:`_class_bound_fabric`), so it stays below every
+    per-axis-priced candidate, serialized or pipelined."""
     fabs = _axis_fabrics(tuple(sizes), fabric, axis_fabrics)
     m, n = _fold_2d(sizes)
     if m * n <= 1:
         return 0.0
-    eff_fabs = [fabs[i] for i, _ in _effective(sizes)]
+    eff = _effective(sizes)
+    eff_fabs = [fabs[i] for i, _ in eff]
     lbf = _lb_fabric(eff_fabs or [fabric])
     b = _elements(nbytes, element_bytes)
     if op == "all_to_all":
-        # Theta(B*(P-1)/P) injection bound over the folded world size;
-        # per-axis phases each inject >= B*(p_ax-1)/p_ax and those
-        # fractions sum to >= (P-1)/P, so decompositions stay above it.
-        return t_all_to_all_lower_bound(m * n, b, lbf)
+        return max(
+            t_all_to_all_lower_bound(p_ax, b,
+                                     _class_bound_fabric(fabs[i],
+                                                         eff_fabs))
+            for i, p_ax in eff)
     if op in ("reduce_scatter", "allgather"):
         p = m * n
-        b = max(1, math.ceil(b * (p - 1) / p))
-        return pat.t_lower_bound_2d(1, 1, b, lbf)
+        return max(
+            pat.t_lower_bound_2d(
+                1, 1, max(1, math.ceil(b * (p_ax - 1) / p)),
+                _class_bound_fabric(fabs[i], eff_fabs))
+            for i, p_ax in eff)
     return pat.t_lower_bound_2d(m, n, b, lbf)
 
 
@@ -244,14 +327,18 @@ def _merge_bytes(into: Dict[int, float], frm: Dict[int, float]) -> None:
 # ---------------------------------------------------------------------- #
 # shape scoring
 # ---------------------------------------------------------------------- #
+ScoredShape = Tuple[float, List[PlanStep], Dict[int, float], PhaseList]
+
+
 def _score_sequential(op_steps_kind: str, sizes: Sequence[int],
                       nbytes: int, select: SelectFn, fabs: AxisFabrics
-                      ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+                      ) -> ScoredShape:
     """Per-axis allreduce, innermost first (the legacy loop); each axis
     priced with its own fabric constants."""
     t = 0.0
     steps: List[PlanStep] = []
     axis_bytes: Dict[int, float] = {}
+    phases: PhaseList = []
     for i in reversed(range(len(sizes))):
         p = sizes[i]
         if p <= 1:
@@ -260,17 +347,19 @@ def _score_sequential(op_steps_kind: str, sizes: Sequence[int],
         t += d.predicted
         steps.append(PlanStep("allreduce", (i,), d.algorithm, nbytes))
         axis_bytes[i] = _wire_bytes(nbytes, p, allreduce=True)
-    return t, steps, axis_bytes
+        phases.append((d.predicted, (i,)))
+    return t, steps, axis_bytes, phases
 
 
 def _score_cascade(op: str, sizes: Sequence[int], nbytes: int,
                    select: SelectFn, fabs: AxisFabrics
-                   ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+                   ) -> ScoredShape:
     """Per-axis reduce_scatter (innermost first) or allgather (outermost
     first); each phase shrinks/grows the live vector by its axis size."""
     t = 0.0
     steps: List[PlanStep] = []
     axis_bytes: Dict[int, float] = {}
+    phases: PhaseList = []
     eff = _effective(sizes)
     order = list(reversed(eff)) if op == "reduce_scatter" else list(eff)
     if op == "allgather":
@@ -291,12 +380,13 @@ def _score_cascade(op: str, sizes: Sequence[int], nbytes: int,
         t += d.predicted
         steps.append(PlanStep(op, (i,), d.algorithm, phase_bytes))
         axis_bytes[i] = _wire_bytes(phase_bytes, p)
-    return t, steps, axis_bytes
+        phases.append((d.predicted, (i,)))
+    return t, steps, axis_bytes, phases
 
 
 def _score_flat(op: str, sizes: Sequence[int], nbytes: int,
                 select: SelectFn, fabs: AxisFabrics
-                ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+                ) -> ScoredShape:
     """Best 1D algorithm over the row-major-folded logical axis.  The
     decision is cached under the full topology signature, not the folded
     P, so a 16-way axis and a folded 2x8 never share entries.  The
@@ -306,7 +396,8 @@ def _score_flat(op: str, sizes: Sequence[int], nbytes: int,
     p = 1
     for s in sizes:
         p *= s
-    eff_fabs = [fabs[i] for i, _ in _effective(sizes)]
+    eff_idx = tuple(i for i, _ in _effective(sizes))
+    eff_fabs = [fabs[i] for i in eff_idx]
     slow = slowest_fabric(*(eff_fabs or [fabs[0]]))
     d = select(op, nbytes, p, topo=tuple(sizes), fabric=slow)
     kind = op if op != "allreduce" else "allreduce"
@@ -315,7 +406,105 @@ def _score_flat(op: str, sizes: Sequence[int], nbytes: int,
     # over any axis, so every axis is charged the full folded traffic
     axis_bytes = {i: _wire_bytes(nbytes, p, allreduce=op == "allreduce")
                   for i, s in enumerate(sizes) if s > 1}
-    return d.predicted, steps, axis_bytes
+    # one phase occupying every effective axis's links: nothing to
+    # overlap, so flat never grows a pipelined variant
+    return d.predicted, steps, axis_bytes, [(d.predicted, eff_idx)]
+
+
+def _score_hierarchical(sizes: Sequence[int], nbytes: int,
+                        fabric: Fabric, element_bytes: int,
+                        select: SelectFn, fabs: AxisFabrics
+                        ) -> ScoredShape:
+    """RS(inner) -> AR(outer, 1/P_inner bytes) -> AG(inner).  The RS and
+    AG phases share the inner axis's links (one link class), the middle
+    allreduce rides the outer axes -- the disjoint class a pipelined
+    variant overlaps against."""
+    eff = _effective(sizes)
+    inner_i, inner_p = eff[-1]
+    rs = select("reduce_scatter", nbytes, inner_p, fabric=fabs[inner_i])
+    ag = select("allgather", nbytes, inner_p, fabric=fabs[inner_i])
+    shard_nbytes = ceil_div(nbytes, inner_p)
+    outer = [(i, p) for i, p in eff[:-1]]
+    h_steps = [PlanStep("reduce_scatter", (inner_i,), rs.algorithm,
+                        nbytes)]
+    h_bytes: Dict[int, float] = {
+        inner_i: _wire_bytes(nbytes, inner_p) * 2.0}
+    if len(outer) == 1:
+        oi, op_ = outer[0]
+        ar = select("allreduce", shard_nbytes, op_, fabric=fabs[oi])
+        h_steps.append(PlanStep("allreduce", (oi,), ar.algorithm,
+                                shard_nbytes))
+        t_mid = ar.predicted
+        h_bytes[oi] = _wire_bytes(shard_nbytes, op_, allreduce=True)
+    else:
+        sub_sizes = tuple(sizes[i] if (i, sizes[i]) in outer else 1
+                          for i in range(len(sizes)))
+        sub = _plan_allreduce(sub_sizes, shard_nbytes, fabric,
+                              element_bytes, select,
+                              axis_fabrics=fabs)
+        h_steps.append(PlanStep("allreduce",
+                                tuple(i for i, _ in outer),
+                                sub["shape"], shard_nbytes))
+        t_mid = sub["predicted"]
+        _merge_bytes(h_bytes,
+                     {int(k): v for k, v in
+                      sub["cost_terms"][sub["shape"]]
+                      ["axis_bytes"].items()})
+    h_steps.append(PlanStep("allgather", (inner_i,), ag.algorithm,
+                            nbytes))
+    phases: PhaseList = [(rs.predicted, (inner_i,)),
+                         (t_mid, tuple(i for i, _ in outer)),
+                         (ag.predicted, (inner_i,))]
+    return (rs.predicted + t_mid + ag.predicted, h_steps, h_bytes,
+            phases)
+
+
+def _add_pipelined(shapes: Dict[str, Tuple[float, List[PlanStep],
+                                           Dict[int, float]]],
+                   extras: Dict[str, Dict[str, Any]], base: str,
+                   nbytes: int, element_bytes: int,
+                   score_chunk: Callable[[int], ScoredShape]) -> None:
+    """Price the chunk-pipelined variant of an already-scored
+    multi-phase shape and add it as the ``<base>_pipelined`` candidate.
+
+    The payload is sliced into ``C`` chunks and chunk ``k``'s phase
+    ``r`` runs while chunk ``k+1`` is still in phase ``r-1``, so phases
+    on *disjoint* link classes overlap across chunks; phases sharing a
+    link class (e.g. the hierarchical RS and AG, both on the inner
+    axis) still serialize on those wires.  Steady state is therefore
+    paced by the most-loaded link class, and the closed form is
+
+        T_pipe(C) = sum_i t_i(B/C) + (C - 1) * max_class sum_cls t_i(B/C)
+
+    (ramp: every phase once at chunk size, then C-1 more chunks behind
+    the bottleneck class).  Per-phase launch/depth overhead is inside
+    every ``t_i(B/C)`` -- charged per chunk -- so small payloads price
+    pipelining out on their own.  The model keeps the argmin C over
+    :data:`PIPELINE_CHUNK_CANDIDATES`; chunk bytes round up to whole
+    elements so the C chunks never total less than the real payload."""
+    base_t = shapes[base][0]
+    best: Optional[Tuple[float, int, List[PlanStep],
+                         Dict[int, float]]] = None
+    for c in PIPELINE_CHUNK_CANDIDATES:
+        cb = ceil_div(ceil_div(nbytes, c), element_bytes) * element_bytes
+        t_sum, steps, ab, phases = score_chunk(cb)
+        classes: Dict[Tuple[int, ...], float] = {}
+        for t_i, cls_axes in phases:
+            key = tuple(sorted(cls_axes))
+            classes[key] = classes.get(key, 0.0) + t_i
+        if len(classes) < 2:
+            return      # everything rides one link class: no overlap
+        t_pipe = t_sum + (c - 1) * max(classes.values())
+        if best is None or t_pipe < best[0]:
+            best = (t_pipe, c, steps, ab)
+    if best is None:
+        return
+    t_pipe, c, steps, ab = best
+    name = f"{base}_pipelined"
+    # total wire bytes = per-chunk bytes x chunk count (slightly above
+    # the serialized shape's when chunking pads the last chunk)
+    shapes[name] = (t_pipe, steps, {i: v * c for i, v in ab.items()})
+    extras[name] = {"n_chunks": c, "overlap_saved": base_t - t_pipe}
 
 
 def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
@@ -327,51 +516,28 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
     eff = _effective(sizes)
     fabs = _axis_fabrics(sizes, fabric, axis_fabrics)
     shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
+    extras: Dict[str, Dict[str, Any]] = {}
 
-    t, steps, ab = _score_sequential("allreduce", sizes, nbytes, select,
-                                     fabs)
+    t, steps, ab, _ = _score_sequential("allreduce", sizes, nbytes,
+                                        select, fabs)
     shapes["sequential"] = (t, steps, ab)
 
     if len(eff) >= 2:
-        shapes["flat"] = _score_flat("allreduce", sizes, nbytes, select,
-                                     fabs)
-
-        # hierarchical: RS(inner) -> AR(outer, 1/P_inner bytes) -> AG(inner)
-        inner_i, inner_p = eff[-1]
-        rs = select("reduce_scatter", nbytes, inner_p,
-                    fabric=fabs[inner_i])
-        ag = select("allgather", nbytes, inner_p, fabric=fabs[inner_i])
-        shard_nbytes = ceil_div(nbytes, inner_p)
-        outer = [(i, p) for i, p in eff[:-1]]
-        h_steps = [PlanStep("reduce_scatter", (inner_i,), rs.algorithm,
-                            nbytes)]
-        h_bytes: Dict[int, float] = {
-            inner_i: _wire_bytes(nbytes, inner_p) * 2.0}
-        if len(outer) == 1:
-            oi, op_ = outer[0]
-            ar = select("allreduce", shard_nbytes, op_, fabric=fabs[oi])
-            h_steps.append(PlanStep("allreduce", (oi,), ar.algorithm,
-                                    shard_nbytes))
-            t_mid = ar.predicted
-            h_bytes[oi] = _wire_bytes(shard_nbytes, op_, allreduce=True)
-        else:
-            sub_sizes = tuple(sizes[i] if (i, sizes[i]) in outer else 1
-                              for i in range(len(sizes)))
-            sub = _plan_allreduce(sub_sizes, shard_nbytes, fabric,
-                                  element_bytes, select,
-                                  axis_fabrics=fabs)
-            h_steps.append(PlanStep("allreduce",
-                                    tuple(i for i, _ in outer),
-                                    sub["shape"], shard_nbytes))
-            t_mid = sub["predicted"]
-            _merge_bytes(h_bytes,
-                         {int(k): v for k, v in
-                          sub["cost_terms"][sub["shape"]]
-                          ["axis_bytes"].items()})
-        h_steps.append(PlanStep("allgather", (inner_i,), ag.algorithm,
-                                nbytes))
-        shapes["hierarchical"] = (rs.predicted + t_mid + ag.predicted,
-                                  h_steps, h_bytes)
+        f_t, f_steps, f_ab, _ = _score_flat("allreduce", sizes, nbytes,
+                                            select, fabs)
+        shapes["flat"] = (f_t, f_steps, f_ab)
+        h_t, h_steps, h_ab, _ = _score_hierarchical(
+            sizes, nbytes, fabric, element_bytes, select, fabs)
+        shapes["hierarchical"] = (h_t, h_steps, h_ab)
+        _add_pipelined(shapes, extras, "sequential", nbytes,
+                       element_bytes,
+                       lambda cb: _score_sequential("allreduce", sizes,
+                                                    cb, select, fabs))
+        _add_pipelined(shapes, extras, "hierarchical", nbytes,
+                       element_bytes,
+                       lambda cb: _score_hierarchical(sizes, cb, fabric,
+                                                      element_bytes,
+                                                      select, fabs))
 
     if len(eff) == 2:
         (mi, m), (ni, n) = eff
@@ -396,24 +562,26 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
             snake_bytes)
 
     return _finish("allreduce", sizes, nbytes, fabric, element_bytes,
-                   shapes, force_shape, fabs)
+                   shapes, force_shape, fabs, extras)
 
 
 def _score_a2a_phases(nbytes: int, select: SelectFn, fabs: AxisFabrics,
                       order: Sequence[Tuple[int, int]]
-                      ) -> Tuple[float, List[PlanStep], Dict[int, float]]:
+                      ) -> ScoredShape:
     """One full-B all-to-all per axis, in ``order``: each phase settles
     that axis's destination sub-index (the data stays B bytes per device
     throughout -- AllToAll conserves volume)."""
     t = 0.0
     steps: List[PlanStep] = []
     axis_bytes: Dict[int, float] = {}
+    phases: PhaseList = []
     for i, p in order:
         d = select("all_to_all", nbytes, p, fabric=fabs[i])
         t += d.predicted
         steps.append(PlanStep("all_to_all", (i,), d.algorithm, nbytes))
         axis_bytes[i] = _wire_bytes(nbytes, p)
-    return t, steps, axis_bytes
+        phases.append((d.predicted, (i,)))
+    return t, steps, axis_bytes, phases
 
 
 def _plan_all_to_all(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
@@ -441,18 +609,27 @@ def _plan_all_to_all(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
     eff = _effective(sizes)
     fabs = _axis_fabrics(sizes, fabric, axis_fabrics)
     shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
+    extras: Dict[str, Dict[str, Any]] = {}
     if len(eff) < 2:
         shapes["sequential"] = _score_a2a_phases(nbytes, select, fabs,
-                                                 list(eff))
+                                                 list(eff))[:3]
     else:
-        shapes["hierarchical"] = _score_a2a_phases(nbytes, select, fabs,
-                                                   list(reversed(eff)))
+        shapes["hierarchical"] = _score_a2a_phases(
+            nbytes, select, fabs, list(reversed(eff)))[:3]
         shapes["sequential"] = _score_a2a_phases(nbytes, select, fabs,
-                                                 list(eff))
+                                                 list(eff))[:3]
         shapes["flat"] = _score_flat("all_to_all", sizes, nbytes, select,
-                                     fabs)
+                                     fabs)[:3]
+        _add_pipelined(shapes, extras, "hierarchical", nbytes,
+                       element_bytes,
+                       lambda cb: _score_a2a_phases(cb, select, fabs,
+                                                    list(reversed(eff))))
+        _add_pipelined(shapes, extras, "sequential", nbytes,
+                       element_bytes,
+                       lambda cb: _score_a2a_phases(cb, select, fabs,
+                                                    list(eff)))
     return _finish("all_to_all", sizes, nbytes, fabric, element_bytes,
-                   shapes, force_shape, fabs)
+                   shapes, force_shape, fabs, extras)
 
 
 def _plan_sharded(op: str, sizes: Tuple[int, ...], nbytes: int,
@@ -463,11 +640,16 @@ def _plan_sharded(op: str, sizes: Tuple[int, ...], nbytes: int,
     eff = _effective(sizes)
     fabs = _axis_fabrics(sizes, fabric, axis_fabrics)
     shapes: Dict[str, Tuple[float, List[PlanStep], Dict[int, float]]] = {}
-    shapes["cascade"] = _score_cascade(op, sizes, nbytes, select, fabs)
+    extras: Dict[str, Dict[str, Any]] = {}
+    shapes["cascade"] = _score_cascade(op, sizes, nbytes, select,
+                                       fabs)[:3]
     if len(eff) >= 2:
-        shapes["flat"] = _score_flat(op, sizes, nbytes, select, fabs)
+        shapes["flat"] = _score_flat(op, sizes, nbytes, select, fabs)[:3]
+        _add_pipelined(shapes, extras, "cascade", nbytes, element_bytes,
+                       lambda cb: _score_cascade(op, sizes, cb, select,
+                                                 fabs))
     return _finish(op, sizes, nbytes, fabric, element_bytes, shapes,
-                   force_shape, fabs)
+                   force_shape, fabs, extras)
 
 
 def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
@@ -475,12 +657,15 @@ def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
             shapes: Dict[str, Tuple[float, List[PlanStep],
                                     Dict[int, float]]],
             force_shape: Optional[str] = None,
-            axis_fabrics: Optional[Sequence[Fabric]] = None
+            axis_fabrics: Optional[Sequence[Fabric]] = None,
+            extras: Optional[Dict[str, Dict[str, Any]]] = None
             ) -> Dict[str, Any]:
+    extras = extras or {}
     if not any(p > 1 for p in sizes):
         return {"op": op, "sizes": list(sizes), "nbytes": nbytes,
                 "shape": "identity", "steps": [], "predicted": 0.0,
-                "predictions": {}, "cost_terms": {}, "lower_bound": 0.0}
+                "predictions": {}, "cost_terms": {}, "lower_bound": 0.0,
+                "n_chunks": 1}
     lb = lower_bound_multi(op, sizes, nbytes, fabric, element_bytes,
                            axis_fabrics)
     predictions = {name: t for name, (t, _, _) in shapes.items()}
@@ -488,7 +673,7 @@ def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
         if t < lb - 1e-6:
             raise RuntimeError(
                 f"model inconsistency: {op} shape {name!r} predicts "
-                f"{t:.3f} cycles, below the 2D lower bound {lb:.3f} "
+                f"{t:.3f} cycles, below the lower bound {lb:.3f} "
                 f"for topology {tuple(sizes)} at {nbytes} bytes")
     if force_shape is not None:
         if force_shape not in shapes:
@@ -500,8 +685,9 @@ def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
         best = min(predictions, key=predictions.get)
     t_best, steps, _ = shapes[best]
     cost_terms = {
-        name: {"predicted": t,
-               "axis_bytes": {str(i): v for i, v in ab.items()}}
+        name: dict({"predicted": t,
+                    "axis_bytes": {str(i): v for i, v in ab.items()}},
+                   **extras.get(name, {}))
         for name, (t, _, ab) in shapes.items()}
     return {"op": op, "sizes": list(sizes), "nbytes": nbytes,
             "shape": best,
@@ -509,7 +695,8 @@ def _finish(op: str, sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
                        "algorithm": s.algorithm, "nbytes": s.nbytes}
                       for s in steps],
             "predicted": t_best, "predictions": predictions,
-            "cost_terms": cost_terms, "lower_bound": lb}
+            "cost_terms": cost_terms, "lower_bound": lb,
+            "n_chunks": int(extras.get(best, {}).get("n_chunks", 1))}
 
 
 # ---------------------------------------------------------------------- #
@@ -556,20 +743,26 @@ def bind_plan(record: Dict[str, Any], op: str,
                  axes=tuple(axes[int(i)] for i in s["axes"]),
                  algorithm=s["algorithm"], nbytes=int(s["nbytes"]))
         for s in record["steps"])
-    cost_terms = {
-        shape: {"predicted": float(entry["predicted"]),
-                "axis_bytes": {axes[int(i)]: float(v)
-                               for i, v in entry["axis_bytes"].items()}}
-        for shape, entry in record["cost_terms"].items()}
+    cost_terms = {}
+    for shape, entry in record["cost_terms"].items():
+        bound = {"predicted": float(entry["predicted"]),
+                 "axis_bytes": {axes[int(i)]: float(v)
+                                for i, v in entry["axis_bytes"].items()}}
+        for k, v in entry.items():
+            if k not in bound:
+                bound[k] = v       # pipelined extras: n_chunks, ...
+        cost_terms[shape] = bound
     return CollectivePlan(
         op=op, axes=axes, axis_sizes=sizes, nbytes=int(record["nbytes"]),
         shape=record["shape"], steps=steps,
         predicted=float(record["predicted"]),
         predictions={k: float(v)
                      for k, v in record["predictions"].items()},
-        cost_terms=cost_terms, lower_bound=float(record["lower_bound"]))
+        cost_terms=cost_terms, lower_bound=float(record["lower_bound"]),
+        n_chunks=int(record.get("n_chunks", 1)))
 
 
 __all__ = ["CollectivePlan", "PlanStep", "plan_collective", "bind_plan",
-           "lower_bound_multi", "ALLREDUCE_SHAPES", "SHARDED_SHAPES",
-           "ALL_TO_ALL_SHAPES"]
+           "lower_bound_multi", "base_shape", "ALLREDUCE_SHAPES",
+           "SHARDED_SHAPES", "ALL_TO_ALL_SHAPES",
+           "PIPELINE_CHUNK_CANDIDATES"]

@@ -12,7 +12,6 @@ as ``jax.lax.psum`` (validated in tests/test_collectives_multidev.py).
 
 from __future__ import annotations
 
-import functools
 from typing import List, Sequence, Tuple
 
 import jax

@@ -24,7 +24,6 @@ on disk keyed by the region parameters.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import os
 from typing import Dict, List, Optional, Tuple
 

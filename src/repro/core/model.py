@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,7 +9,7 @@ that the unit tests can assert our generic ``ReduceTree.cost_terms`` +
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 from repro.core.model import CostTerms, Fabric, WSE2, ceil_div, log2i
 from repro.core import schedule as sched

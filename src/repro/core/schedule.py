@@ -22,9 +22,9 @@ to a round-based ``ppermute`` program for TPU meshes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Tuple
 
-from repro.core.model import CostTerms, ceil_div, is_power_of_two
+from repro.core.model import CostTerms, is_power_of_two
 
 
 Position = Tuple[int, int]

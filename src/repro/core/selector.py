@@ -9,9 +9,8 @@ and the mechanism our TPU collective layer reuses with ICI constants.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
-import numpy as np
 
 from repro.core import patterns as pat
 from repro.core.autogen import AutoGenTables, compute_tables, t_autogen

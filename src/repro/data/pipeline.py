@@ -13,7 +13,7 @@ stream has nothing to learn).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,6 @@ import traceback
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, all_configs, cell_is_runnable, get_config

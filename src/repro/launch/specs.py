@@ -15,7 +15,7 @@ uses a ``seq_len`` self-attention cache and a 1500-frame cross cache.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

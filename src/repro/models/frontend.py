@@ -9,7 +9,6 @@ examples) and described by ``input_specs`` (for the dry-run).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 

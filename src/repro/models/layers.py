@@ -11,9 +11,7 @@ computation; see DESIGN.md (hardware adaptation).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

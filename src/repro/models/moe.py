@@ -13,8 +13,7 @@ ratio honest for the MoE architectures.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,6 @@ def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate: jax.Array,
     [E, F, D].  Returns (out [G, gs, D], aux_loss scalar)."""
     g, gs, d = x.shape
     e = router_w.shape[1]
-    f = w_gate.shape[2]
     cap = moe_capacity(gs, e, top_k, capacity_factor)
 
     logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # [G,gs,E]
@@ -125,7 +123,6 @@ def _moe_local(x, router_w, w_gate, w_up, w_down, *, top_k: int,
         w_up = jax.lax.all_gather(w_up, fsdp_axis, axis=1, tiled=True)
         w_down = jax.lax.all_gather(w_down, fsdp_axis, axis=2, tiled=True)
     e_local = w_gate.shape[0]
-    n_ranks = e_total // e_local
     rank = jax.lax.axis_index(model_axis)
     cap = moe_capacity(gs, e_total, top_k, capacity_factor)
 

@@ -12,8 +12,10 @@ each device routes only its own tokens, and dispatch/combine are
 explicit **all-to-all** exchanges routed through
 ``CollectiveEngine.all_to_all_multi`` -- so the planner prices the
 exchange per axis (`hierarchical` 2-phase intra-pod/inter-pod vs
-`sequential` vs `flat` single-shot), heterogeneous ``FabricTopology``
-constants included, and the decision lands in the persistent cache.
+`sequential` vs `flat` single-shot, plus chunk-pipelined variants that
+overlap the inter-pod phase of one payload slice with the intra-pod
+phase of the next), heterogeneous ``FabricTopology`` constants
+included, and the decision lands in the persistent cache.
 
 Layout (inside one shard_map over the mesh):
 

@@ -17,7 +17,7 @@ in the dry-run, real arrays in tests/examples).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ principles on small grids.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 from repro.core.model import Fabric, WSE2
 from repro.core.schedule import ReduceTree

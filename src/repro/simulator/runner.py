@@ -9,11 +9,10 @@ paper does per figure.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Optional
 
 from repro.core import patterns as pat
-from repro.core.autogen import AutoGenTables, autogen_tree, compute_tables, t_autogen
+from repro.core.autogen import AutoGenTables, autogen_tree, t_autogen
 from repro.core.model import Fabric, WSE2
 from repro.core.schedule import (ReduceTree, binary_tree, chain_tree,
                                  snake_tree, star_tree, two_phase_tree)

@@ -1,14 +1,11 @@
 """Auto-Gen DP: correctness vs brute force, dominance, tree extraction."""
 
-import itertools
 
 import numpy as np
 import pytest
 
 from repro.core import patterns as pat
 from repro.core.autogen import autogen_tree, compute_tables, t_autogen
-from repro.core.model import WSE2
-from repro.core.schedule import ReduceTree
 
 
 def brute_force_energy(p: int, d: int, c: int) -> float:

@@ -4,10 +4,9 @@ requirement)."""
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs import all_configs, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.models import (decode_step, forward_train, init_params, prefill)
 from repro.models.frontend import audio_frames, vision_patches
 from repro.optim.adamw import AdamWConfig

@@ -56,7 +56,9 @@ def test_planner_argmin_and_predictions(tmp_path):
     eng = _engine(tmp_path)
     plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 16), 1 << 22)
     assert set(plan.predictions) == {"sequential", "hierarchical",
-                                     "2d_xy", "2d_snake", "flat"}
+                                     "2d_xy", "2d_snake", "flat",
+                                     "sequential_pipelined",
+                                     "hierarchical_pipelined"}
     assert plan.predicted == min(plan.predictions.values())
     assert plan.shape == min(plan.predictions, key=plan.predictions.get)
     # hierarchical must beat sequential at DP-bucket sizes: its cross-pod
@@ -116,9 +118,11 @@ def test_sharded_op_plans(tmp_path):
     eng = _engine(tmp_path)
     rs = eng.plan_multi("reduce_scatter", ("pod", "data"), (2, 4),
                         1 << 20)
-    assert set(rs.predictions) == {"cascade", "flat"}
+    assert set(rs.predictions) == {"cascade", "flat",
+                                   "cascade_pipelined"}
     ag = eng.plan_multi("allgather", ("pod", "data"), (2, 4), 1 << 20)
-    assert set(ag.predictions) == {"cascade", "flat"}
+    assert set(ag.predictions) == {"cascade", "flat",
+                                   "cascade_pipelined"}
     # cascade reduce-scatter shrinks innermost-first
     forced = eng.plan_multi("reduce_scatter", ("pod", "data"), (2, 4),
                             1 << 20, shape="cascade")
@@ -135,7 +139,8 @@ def test_a2a_candidate_set_and_shapes(tmp_path):
     eng = _engine(tmp_path)
     plan = eng.plan_multi("all_to_all", ("pod", "data"), (2, 4), 1 << 20)
     assert set(plan.predictions) == {"hierarchical", "sequential",
-                                     "flat"}
+                                     "flat", "hierarchical_pipelined",
+                                     "sequential_pipelined"}
     assert plan.predicted == min(plan.predictions.values())
     # hierarchical runs intra-pod (inner) first, then cross-pod
     forced = eng.plan_multi("all_to_all", ("pod", "data"), (2, 4),
@@ -179,8 +184,8 @@ def test_a2a_slow_pod_picks_hierarchical_fewer_cross_pod_bytes():
         for nbytes in (1 << 16, 1 << 20, 64 << 20):
             plan = eng.plan_multi("all_to_all", ("pod", "data"), sizes,
                                   nbytes)
-            assert plan.shape == "hierarchical", (sizes, nbytes,
-                                                  plan.predictions)
+            assert planner.base_shape(plan.shape) == "hierarchical", (
+                sizes, nbytes, plan.predictions)
             hier = plan.cost_terms["hierarchical"]["axis_bytes"]["pod"]
             flat = plan.cost_terms["flat"]["axis_bytes"]["pod"]
             assert hier < flat, (sizes, nbytes)
@@ -314,8 +319,8 @@ def test_asymmetric_topology_selects_hierarchical():
         for nbytes in (1 << 20, 4 << 20, 64 << 20):
             plan = eng.plan_multi("allreduce", ("pod", "data"), sizes,
                                   nbytes)
-            assert plan.shape == "hierarchical", (sizes, nbytes,
-                                                  plan.predictions)
+            assert planner.base_shape(plan.shape) == "hierarchical", (
+                sizes, nbytes, plan.predictions)
             hier = plan.cost_terms["hierarchical"]["axis_bytes"]["pod"]
             flat = plan.cost_terms["flat"]["axis_bytes"]["pod"]
             seq = plan.cost_terms["sequential"]["axis_bytes"]["pod"]
@@ -354,14 +359,18 @@ def test_uniform_topology_prices_bit_for_bit():
         ((2, 16), 1 << 22): {
             "sequential": 29276.0, "flat": 26968.0,
             "hierarchical": 19620.0, "2d_xy": 61076.0,
-            "2d_snake": 55555.0},
+            "2d_snake": 55555.0, "sequential_pipelined": 30548.0,
+            "hierarchical_pipelined": 22756.0},
         ((2, 4), 1 << 16): {
             "sequential": 1704.0, "flat": 1830.0, "hierarchical": 1470.0,
-            "2d_xy": 1781.0, "2d_snake": 2289.0},
+            "2d_xy": 1781.0, "2d_snake": 2289.0,
+            "sequential_pipelined": 2348.0,
+            "hierarchical_pipelined": 2344.0},
         ((4, 4), 16 << 20): {
             "sequential": 100448.0, "flat": 66808.0,
             "hierarchical": 63402.0, "2d_xy": 198384.0,
-            "2d_snake": 167218.0},
+            "2d_snake": 167218.0, "sequential_pipelined": 64944.0,
+            "hierarchical_pipelined": 56856.0},
     }
     for wrap in (TPU_V5E_AXIS, FabricTopology.uniform(TPU_V5E_AXIS)):
         eng = CollectiveEngine(fabric=wrap, persist=False)
@@ -372,8 +381,9 @@ def test_uniform_topology_prices_bit_for_bit():
                                               plan.predictions)
         rs = eng.plan_multi("reduce_scatter", ("pod", "data"), (2, 4),
                             1 << 20)
-        assert rs.predictions == {"cascade": 2506.0, "flat": 3044.0}
-        assert rs.lower_bound == 1969.0
+        assert rs.predictions == {"cascade": 2506.0, "flat": 3044.0,
+                                  "cascade_pipelined": 2914.0}
+        assert rs.lower_bound == 945.0
         assert eng.select("allreduce", 1 << 20, 8).predictions == {
             "chain": 9969.0, "tree": 13350.0, "two_phase": 11479.0,
             "ring": 6088.0}
@@ -381,7 +391,9 @@ def test_uniform_topology_prices_bit_for_bit():
     pw = wse.plan_multi("allreduce", ("y", "x"), (4, 4), 4096 * 512)
     assert pw.predictions == {
         "sequential": 12368.0, "flat": 7888.0, "hierarchical": 7750.0,
-        "2d_xy": 12335.0, "2d_snake": 8293.0}
+        "2d_xy": 12335.0, "2d_snake": 8293.0,
+        "sequential_pipelined": 7272.0,
+        "hierarchical_pipelined": 6616.0}
     assert pw.lower_bound == 4101.0
 
 
@@ -432,7 +444,7 @@ def test_parse_fabric_topology_spec_drives_planner():
     assert pod.t_r == pytest.approx(TPU_V5E_AXIS.t_r * 4)
     eng = CollectiveEngine(fabric=topo, persist=False)
     plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 16), 4 << 20)
-    assert plan.shape == "hierarchical"
+    assert planner.base_shape(plan.shape) == "hierarchical"
 
 
 def test_lower_bound_multi_folding():

@@ -9,8 +9,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core.lowerbound import compute_lb_energy, t_lower_bound
 from repro.core.model import WSE2
 from repro.core import patterns as pat
-from repro.core.schedule import (ReduceTree, binary_tree, chain_tree,
-                                 star_tree, two_phase_tree)
+from repro.core.schedule import (binary_tree, chain_tree, star_tree,
+                                 two_phase_tree)
 from tests.util_trees import random_pre_order_tree
 
 

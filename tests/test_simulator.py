@@ -4,19 +4,17 @@ paper's own observations (star overhead, chain pipelining)."""
 import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.core import patterns as pat
 from repro.core.autogen import autogen_tree, compute_tables
-from repro.core.model import Fabric, WSE2
-from repro.core.schedule import (binary_tree, chain_tree, snake_tree,
-                                 star_tree, two_phase_tree)
+from repro.core.model import WSE2
+from repro.core.schedule import (binary_tree, chain_tree, star_tree,
+                                 two_phase_tree)
 from repro.simulator.fabric import (simulate_broadcast_fabric,
                                     simulate_reduce_fabric)
 from repro.simulator.flow import (simulate_broadcast, simulate_reduce_tree,
                                   simulate_ring_allreduce)
-from repro.simulator.runner import (compare_allreduce, compare_reduce,
-                                    compare_reduce_2d)
+from repro.simulator.runner import compare_reduce, compare_reduce_2d
 
 
 def test_flow_chain_matches_lemma():

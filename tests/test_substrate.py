@@ -11,8 +11,7 @@ import pytest
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, all_configs, cell_is_runnable, get_config
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
-from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
-                               init_state, lr_at)
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state, lr_at
 from repro.runtime import (HeartbeatMonitor, PreemptionGuard,
                            StragglerDetector, plan_elastic_remesh)
 

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests: train loop learns, checkpoint-resume is
 bit-stable, serving loop decodes."""
 
-import dataclasses
 import tempfile
 
 import numpy as np

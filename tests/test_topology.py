@@ -11,9 +11,9 @@ import json
 import pytest
 
 from repro.core import patterns as pat
-from repro.core.model import (CostTerms, Fabric, FabricTopology,
-                              TPU_V5E_AXIS, WSE2, as_topology,
-                              parse_fabric_topology, slowest_fabric)
+from repro.core.model import (CostTerms, FabricTopology, TPU_V5E_AXIS, WSE2,
+                              as_topology, parse_fabric_topology,
+                              slowest_fabric)
 
 SLOW = dataclasses.replace(TPU_V5E_AXIS, name="slow", link_bw=0.25,
                            t_r=TPU_V5E_AXIS.t_r * 4)

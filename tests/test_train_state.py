@@ -4,7 +4,6 @@ shards round-trip back to the tree layout (fast tier, no devices)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.collectives.overlap import flatten_tree
 from repro.optim.adamw import AdamWConfig, AdamWState, apply_updates

@@ -42,6 +42,19 @@ PAIRS: Tuple[Tuple[str, str], ...] = (
 )
 
 
+def _check_metrics_section(current: str) -> List[str]:
+    """Schema-validate the registry export a BENCH artifact embeds
+    under ``"metrics"`` (absent section = nothing to check: older
+    benches have not migrated yet)."""
+    with open(current) as f:
+        blob = json.load(f)
+    metrics = blob.get("metrics") if isinstance(blob, dict) else None
+    if metrics is None:
+        return []
+    from repro.obs.registry import validate_export
+    return validate_export(metrics)
+
+
 def _gate(pairs, tolerance: float) -> int:
     codes: List[Tuple[str, int]] = []
     for current, baseline in pairs:
@@ -54,6 +67,13 @@ def _gate(pairs, tolerance: float) -> int:
         if not os.path.exists(baseline):
             print(f"bench_gate: {baseline} missing -- commit one (run "
                   f"with --refresh) to gate {current}", file=sys.stderr)
+            codes.append((current, 2))
+            continue
+        problems = _check_metrics_section(current)
+        if problems:
+            for p in problems:
+                print(f"bench_gate: {current} metrics section invalid: "
+                      f"{p}", file=sys.stderr)
             codes.append((current, 2))
             continue
         rc = bench_diff.main([current, "--baseline", baseline,

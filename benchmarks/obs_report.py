@@ -1,0 +1,76 @@
+"""Offline observability report over a Chrome-trace export.
+
+Reads the trace JSON written by ``--trace`` (launch/train.py,
+launch/serve.py, or any :meth:`Tracer.export_chrome` call), feeds the
+collective spans to the model-error monitor, and prints the
+per-(op, topology, bytes-decile) predicted-vs-measured table with
+drift flags.
+
+    PYTHONPATH=src python benchmarks/obs_report.py TRACE.json
+    PYTHONPATH=src python benchmarks/obs_report.py TRACE.json --json
+    PYTHONPATH=src python benchmarks/obs_report.py TRACE.json --check
+
+``--check`` is the CI schema gate: it validates that every collective
+span carries the required args (op, axes, bytes, plan, cache,
+predicted, measured_s, mode) and exits non-zero listing the
+violations, printing nothing else on success.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import load_chrome_trace, validate_spans
+from repro.obs.model_error import DEFAULT_THRESHOLD, ModelErrorMonitor
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="model-error report over a --trace export")
+    ap.add_argument("trace", help="Chrome-trace JSON written by --trace")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="drift threshold as a fraction "
+                         f"(default {DEFAULT_THRESHOLD})")
+    ap.add_argument("--min-samples", type=int, default=8,
+                    help="samples a bin needs to anchor and to flag")
+    ap.add_argument("--seconds-per-cycle", type=float, default=None,
+                    help="known model-cycle duration; omit to let each "
+                         "bin self-anchor")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of a table")
+    ap.add_argument("--check", action="store_true",
+                    help="schema gate: validate span conformance and "
+                         "exit 1 on problems")
+    args = ap.parse_args(argv)
+
+    spans = load_chrome_trace(args.trace)
+
+    if args.check:
+        problems = validate_spans(spans)
+        if problems:
+            for p in problems:
+                print(f"[obs-report] FAIL: {p}", file=sys.stderr)
+            return 1
+        n = sum(1 for sp in spans if sp.cat == "collective")
+        print(f"[obs-report] OK: {n} collective spans conform")
+        return 0
+
+    mon = ModelErrorMonitor(threshold=args.threshold,
+                            min_samples=args.min_samples,
+                            seconds_per_cycle=args.seconds_per_cycle)
+    fed = mon.observe_spans(spans)
+    if args.json:
+        report = mon.report()
+        report["spans"] = len(spans)
+        report["spans_scored"] = fed
+        print(json.dumps(report, indent=2, sort_keys=True))
+    else:
+        print(f"[obs-report] {len(spans)} spans loaded, {fed} scored")
+        print(mon.render_table())
+    return 2 if mon.should_recalibrate else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

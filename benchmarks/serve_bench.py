@@ -57,7 +57,18 @@ def run(arch: str = "minicpm-2b", batch: int = 4, requests: int = 12,
     wall = time.time() - t0
     snap = server.snapshot()
     tokens = sum(len(v) for k, v in results.items() if k >= 0)
+
+    # registry export rides along under "metrics": same numbers, the
+    # unified schema (repro.obs.registry) -- bench_gate validates it,
+    # and the gated top-level counters above stay untouched
+    from repro.collectives.api import get_engine
+    from repro.obs.registry import MetricsRegistry, export_engine_stats
+    from repro.serving.telemetry import export_to_registry
+    reg = MetricsRegistry()
+    export_to_registry(snap, reg, prefix="serve")
+    export_engine_stats(get_engine(), reg)
     return {
+        "metrics": reg.export_json(),
         "arch": arch,
         "batch": batch,
         "requests": requests,

@@ -55,6 +55,7 @@ from repro.core.autogen import autogen_tree, cache_dir, compute_tables
 from repro.core.model import (Fabric, FabricTopology, TPU_V5E_AXIS,
                               as_topology, ceil_div)
 from repro.core import selector
+from repro.obs import trace as obs_trace
 from repro.collectives import planner
 from repro.collectives import shardmap_impl as impl
 
@@ -446,11 +447,28 @@ class CollectiveEngine:
             return ""
         return f"|f={self._fabric_one_tag(fabric)}"
 
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Atomic copy of the cache counters.  ``self.stats`` is
+        mutated in place by every caller sharing the engine; exports
+        (and asserting tests) want one consistent view, which this
+        returns under the same lock the mutations hold."""
+        with self._lock:
+            return dict(self.stats)
+
     def select(self, op: str, nbytes: int, p: int,
                topo: Optional[Tuple[int, ...]] = None,
                fabric: Optional[Fabric] = None) -> Decision:
+        d, _ = self._select_meta(op, nbytes, p, topo=topo, fabric=fabric)
+        return d
+
+    def _select_meta(self, op: str, nbytes: int, p: int,
+                     topo: Optional[Tuple[int, ...]] = None,
+                     fabric: Optional[Fabric] = None
+                     ) -> Tuple[Decision, bool]:
         """Model-driven selection, memoized by the full topology
-        signature ``(op, axis_sizes, bytes, fabric)``.
+        signature ``(op, axis_sizes, bytes, fabric)``.  Returns the
+        decision plus whether it came from the cache (the bit a span
+        records).
 
         For a bare 1D axis the signature is ``(p,)``; a folded logical
         axis passes its shape as ``topo`` (e.g. ``(2, 8)``) so a 16-way
@@ -468,7 +486,7 @@ class CollectiveEngine:
         ``stats['dp_runs']`` via the tree/table caches).
         """
         if p <= 1:
-            return Decision(op, p, nbytes, "identity", 0.0, {})
+            return Decision(op, p, nbytes, "identity", 0.0, {}), False
         fab = fabric or self.topology.default
         with self._lock:
             self._load_persisted()
@@ -477,7 +495,7 @@ class CollectiveEngine:
             hit = self._decisions.get(key)
             if hit is not None:
                 self.stats["hits"] += 1
-                return hit
+                return hit, True
             self.stats["misses"] += 1
             b = self._elements(nbytes)
             # allreduce keeps the paper-selector candidate set; all_to_all
@@ -504,13 +522,33 @@ class CollectiveEngine:
             self._decisions[key] = decision
             self._dirty = True
             self._maybe_save()
-            return decision
+            return decision, False
 
     def plan_multi(self, op: str, axes: Sequence[str],
                    sizes: Sequence[int], nbytes: int,
                    shape: Optional[str] = None) -> planner.CollectivePlan:
+        """Public cover of :meth:`_plan_multi_meta`: the plan without
+        the cache-hit bit.  Annotates the innermost open span (if any)
+        with the chosen plan and its predicted cost."""
+        plan, hit = self._plan_multi_meta(op, axes, sizes, nbytes,
+                                          shape=shape)
+        sp = obs_trace.get_tracer().current_span()
+        if getattr(sp, "args", {}).get("plan") is None:
+            sp.set(plan=plan.describe(), n_chunks=int(plan.n_chunks),
+                   algorithm=str(plan.shape),
+                   predicted=float(plan.predicted),
+                   cache="hit" if hit else "miss")
+            if shape is not None:
+                sp.set(algorithm_forced=True)
+        return plan
+
+    def _plan_multi_meta(self, op: str, axes: Sequence[str],
+                         sizes: Sequence[int], nbytes: int,
+                         shape: Optional[str] = None
+                         ) -> Tuple[planner.CollectivePlan, bool]:
         """Topology-aware joint plan for an axis tuple, memoized and
-        persisted by ``(op, axis_sizes, bytes, fabric)``.
+        persisted by ``(op, axis_sizes, bytes, fabric)``.  Returns the
+        bound plan plus whether the scored record came from the cache.
 
         Each axis is priced with its fabric from ``self.topology`` (by
         axis *name*), so hierarchical compositions genuinely win when
@@ -538,6 +576,7 @@ class CollectiveEngine:
             if shape is not None:
                 key += f"|shape={shape}"
             rec = self._plans.get(key)
+            hit = rec is not None
             if rec is None:
                 self.stats["plan_misses"] += 1
                 rec = planner.plan_collective(
@@ -549,7 +588,7 @@ class CollectiveEngine:
                 self._maybe_save()
             else:
                 self.stats["plan_hits"] += 1
-        return planner.bind_plan(rec, op, axes)
+        return planner.bind_plan(rec, op, axes), hit
 
     def clear_cache(self) -> None:
         with self._lock:
@@ -677,13 +716,61 @@ class CollectiveEngine:
         axis) resolves the axis-local fabric on a heterogeneous
         topology."""
         fab = self.topology.for_axis(axis)
+        # annotate the innermost open span -- first writer wins, so a
+        # nested resolution (allreduce -> reduce) never overwrites the
+        # outer op's decision on the outer op's span
+        sp = obs_trace.get_tracer().current_span()
+        if getattr(sp, "args", {}).get("algorithm") is not None:
+            sp = obs_trace.NULL_SPAN
         if algorithm == "auto":
-            d = self.select(op, nbytes, p, fabric=fab)
+            d, hit = self._select_meta(op, nbytes, p, fabric=fab)
+            sp.set(algorithm=d.algorithm, predicted=float(d.predicted),
+                   cache="hit" if hit else "miss")
             return d.algorithm, d.rounds
+        sp.set(algorithm=algorithm, algorithm_forced=True, cache="forced")
         if algorithm in ("autogen", "autogen_pipelined"):
             b = self._tree_elements(op, self._elements(nbytes), p)
             return algorithm, self.tree_rounds(p, b, fabric=fab)
         return algorithm, None
+
+    # ------------------------------------------------------------------ #
+    # span plumbing: every public collective opens one CAT_COLLECTIVE
+    # span; `_resolve` / `plan_multi` annotate it with the decision
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _collective_span(name: str, op: str, axis_or_axes: Any,
+                         nbytes: int, algorithm: str):
+        """Open a collective span carrying every key the trace schema
+        requires (``REQUIRED_COLLECTIVE_ARGS``), so a span is
+        conformant even when the op bypasses the model (native/forced
+        paths fill the rest in :meth:`_finish_collective`)."""
+        tracer = obs_trace.get_tracer()
+        if not tracer.enabled:
+            return obs_trace.NULL_SPAN
+        if isinstance(axis_or_axes, (tuple, list)):
+            names = tuple(str(a) for a in axis_or_axes)
+        else:
+            names = (str(axis_or_axes),)
+        try:
+            sizes = tuple(int(impl._axis_size(a)) for a in names)
+        except Exception:
+            sizes = ()
+        return tracer.span(
+            name, cat=obs_trace.CAT_COLLECTIVE, op=op, axes=names,
+            axis_sizes=sizes, bytes=int(nbytes),
+            requested=str(algorithm), plan=None, algorithm=None,
+            cache=None, predicted=None, measured_s=None, mode=None)
+
+    @staticmethod
+    def _finish_collective(sp, out: jax.Array, requested: str) -> None:
+        """Close out a collective span: paths that never reached the
+        model (native XLA ops, identity axes) stamp the requested
+        algorithm as forced, then the result stamps mode/wall time."""
+        span = getattr(sp, "span", None)
+        if span is not None and span.args.get("algorithm") is None:
+            sp.set(algorithm=str(requested), algorithm_forced=True,
+                   cache="forced")
+        sp.finish_result(out)
 
     def reduce_inside(self, x: jax.Array, axis: str,
                       algorithm: str = "auto") -> jax.Array:
@@ -711,6 +798,17 @@ class CollectiveEngine:
 
     def allreduce_inside(self, x: jax.Array, axis: str,
                          algorithm: str = "auto") -> jax.Array:
+        if not obs_trace.get_tracer().enabled:
+            return self._allreduce_inside(x, axis, algorithm)
+        with self._collective_span("allreduce_inside", "allreduce", axis,
+                                   x.size * x.dtype.itemsize,
+                                   algorithm) as sp:
+            out = self._allreduce_inside(x, axis, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _allreduce_inside(self, x: jax.Array, axis: str,
+                          algorithm: str = "auto") -> jax.Array:
         if algorithm == "psum":
             return lax.psum(x, axis)
         p = impl._axis_size(axis)
@@ -729,6 +827,18 @@ class CollectiveEngine:
         """Sum over the axis, shard the result: device i gets chunk i
         (``lax.psum_scatter(..., tiled=True)`` semantics; leading dim
         divisible by P)."""
+        if not obs_trace.get_tracer().enabled:
+            return self._reduce_scatter_inside(x, axis, algorithm)
+        with self._collective_span("reduce_scatter_inside",
+                                   "reduce_scatter", axis,
+                                   x.size * x.dtype.itemsize,
+                                   algorithm) as sp:
+            out = self._reduce_scatter_inside(x, axis, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _reduce_scatter_inside(self, x: jax.Array, axis: str,
+                               algorithm: str = "auto") -> jax.Array:
         p = impl._axis_size(axis)
         if p == 1:
             return x
@@ -749,6 +859,19 @@ class CollectiveEngine:
                          algorithm: str = "auto") -> jax.Array:
         """Gather shards along the axis into the leading dim
         (``lax.all_gather(..., tiled=True)`` semantics)."""
+        if not obs_trace.get_tracer().enabled:
+            return self._allgather_inside(x, axis, algorithm)
+        # the span (like the cost model) records the GLOBAL gathered
+        # bytes, shard * P -- the replayer relies on this convention
+        nbytes = x.size * x.dtype.itemsize * impl._axis_size(axis)
+        with self._collective_span("allgather_inside", "allgather",
+                                   axis, nbytes, algorithm) as sp:
+            out = self._allgather_inside(x, axis, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _allgather_inside(self, x: jax.Array, axis: str,
+                          algorithm: str = "auto") -> jax.Array:
         p = impl._axis_size(axis)
         if p == 1:
             return x
@@ -777,6 +900,17 @@ class CollectiveEngine:
         ``algorithm``: ``lax`` (XLA native), ``ring``
         (pairwise-exchange, injection-optimal), ``halving`` (Bruck,
         log-launch), or ``auto`` (model argmin)."""
+        if not obs_trace.get_tracer().enabled:
+            return self._all_to_all_inside(x, axis, algorithm)
+        with self._collective_span("all_to_all_inside", "all_to_all",
+                                   axis, x.size * x.dtype.itemsize,
+                                   algorithm) as sp:
+            out = self._all_to_all_inside(x, axis, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _all_to_all_inside(self, x: jax.Array, axis,
+                           algorithm: str = "auto") -> jax.Array:
         p = impl._axis_size(axis)
         if p == 1:
             return x
@@ -833,8 +967,18 @@ class CollectiveEngine:
     # chunked phase-runner: one wavefront executor for every plan
     # ------------------------------------------------------------------ #
     @staticmethod
-    def _run_phases(chunks: List[jax.Array],
-                    phase_fns: Sequence[Callable[[jax.Array], jax.Array]]
+    def _phase_names(steps: Sequence["planner.PlanStep"]) -> List[str]:
+        """Human labels for a plan's phases, mirroring
+        ``CollectivePlan.describe()`` per step."""
+        return [
+            f"{planner._KIND_ABBREV.get(s.kind, s.kind)}:"
+            f"{s.algorithm}@{'x'.join(s.axes)}"
+            for s in steps]
+
+    def _run_phases(self, chunks: List[jax.Array],
+                    phase_fns: Sequence[Callable[[jax.Array], jax.Array]],
+                    op: Optional[str] = None,
+                    phase_names: Optional[Sequence[str]] = None
                     ) -> List[jax.Array]:
         """Execute ``phase_fns`` over payload ``chunks`` as a wavefront
         pipeline: in wave ``w``, chunk ``k`` runs phase ``w - k`` -- so
@@ -844,14 +988,33 @@ class CollectiveEngine:
         orders one chunk's phase after another chunk's; the compiler is
         free to run them concurrently.  With a single chunk this
         degenerates to running the phases back-to-back -- the
-        serialized plan executor, shared by every plan shape."""
+        serialized plan executor, shared by every plan shape.
+
+        With tracing enabled each phase call is wrapped in a
+        ``jax.named_scope`` (so an XLA profile lines up with the plan's
+        phase decomposition) and emits a nested CAT_PHASE span; phase
+        spans never block, whatever the tracer's measurement mode."""
+        tracer = obs_trace.get_tracer()
         chunks = list(chunks)
         n = len(phase_fns)
         for wave in range(n + len(chunks) - 1):
             for k in range(len(chunks)):
                 r = wave - k
-                if 0 <= r < n:
+                if not 0 <= r < n:
+                    continue
+                if not tracer.enabled:
                     chunks[k] = phase_fns[r](chunks[k])
+                    continue
+                label = (phase_names[r]
+                         if phase_names and r < len(phase_names)
+                         else f"phase{r}")
+                scope = f"{op or 'collective'}.{label}".replace(":", "_")
+                with jax.named_scope(scope), \
+                        tracer.span(label, cat=obs_trace.CAT_PHASE,
+                                    op=op, phase=r, chunk=k,
+                                    wave=wave) as sp:
+                    chunks[k] = phase_fns[r](chunks[k])
+                    sp.finish_result(chunks[k], block=False)
         return chunks
 
     @staticmethod
@@ -900,6 +1063,17 @@ class CollectiveEngine:
         axes = tuple(axes)
         if len(axes) == 1:
             return self.allreduce_inside(x, axes[0], algorithm)
+        if not obs_trace.get_tracer().enabled:
+            return self._allreduce_multi(x, axes, algorithm)
+        with self._collective_span("allreduce_multi", "allreduce", axes,
+                                   x.size * x.dtype.itemsize,
+                                   algorithm) as sp:
+            out = self._allreduce_multi(x, axes, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _allreduce_multi(self, x: jax.Array, axes: Tuple[str, ...],
+                         algorithm: str) -> jax.Array:
         if algorithm == "psum":
             return lax.psum(x, axes)
         sizes = self._multi_sizes(axes)
@@ -944,7 +1118,8 @@ class CollectiveEngine:
         chunks = [flat[k * chunk_len:(k + 1) * chunk_len]
                   for k in range(c)]
         fns = self._allreduce_phase_fns(plan, base, chunk_len)
-        chunks = self._run_phases(chunks, fns)
+        chunks = self._run_phases(chunks, fns, op="allreduce",
+                                  phase_names=self._phase_names(plan.steps))
         out = jnp.concatenate(chunks) if c > 1 else chunks[0]
         if pad:
             out = out[:n]
@@ -991,6 +1166,18 @@ class CollectiveEngine:
         axes = tuple(axes)
         if len(axes) == 1:
             return self.reduce_scatter_inside(x, axes[0], algorithm)
+        if not obs_trace.get_tracer().enabled:
+            return self._reduce_scatter_multi(x, axes, algorithm)
+        with self._collective_span("reduce_scatter_multi",
+                                   "reduce_scatter", axes,
+                                   x.size * x.dtype.itemsize,
+                                   algorithm) as sp:
+            out = self._reduce_scatter_multi(x, axes, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _reduce_scatter_multi(self, x: jax.Array, axes: Tuple[str, ...],
+                              algorithm: str) -> jax.Array:
         if algorithm == "psum_scatter":
             return lax.psum_scatter(x, axes, scatter_dimension=0,
                                     tiled=True)
@@ -1022,11 +1209,14 @@ class CollectiveEngine:
             (lambda v, s=step: self.reduce_scatter_inside(
                 v, s.axes[0], s.algorithm))
             for step in steps[1:]]
+        names = self._phase_names(steps)
         c = max(1, plan.n_chunks)
         if c == 1:
-            return self._run_phases([x], fns)[0]
+            return self._run_phases([x], fns, op="reduce_scatter",
+                                    phase_names=names)[0]
         chunks, m = self._split_row_chunks(x, p, c)
-        chunks = self._run_phases(chunks, fns)
+        chunks = self._run_phases(chunks, fns, op="reduce_scatter",
+                                  phase_names=names)
         return jnp.concatenate(chunks, axis=0)[:m]
 
     def allgather_multi(self, x: jax.Array, axes: Sequence[str],
@@ -1037,6 +1227,18 @@ class CollectiveEngine:
         axes = tuple(axes)
         if len(axes) == 1:
             return self.allgather_inside(x, axes[0], algorithm)
+        if not obs_trace.get_tracer().enabled:
+            return self._allgather_multi(x, axes, algorithm)
+        # global gathered bytes, matching the model's B and the replayer
+        nbytes = x.size * x.dtype.itemsize * impl._axis_size(axes)
+        with self._collective_span("allgather_multi", "allgather", axes,
+                                   nbytes, algorithm) as sp:
+            out = self._allgather_multi(x, axes, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _allgather_multi(self, x: jax.Array, axes: Tuple[str, ...],
+                         algorithm: str) -> jax.Array:
         if algorithm == "all_gather":
             return lax.all_gather(x, axes, tiled=True)
         sizes = self._multi_sizes(axes)
@@ -1066,9 +1268,11 @@ class CollectiveEngine:
             (lambda v, s=step: self.allgather_inside(
                 v, s.axes[0], s.algorithm))
             for step in steps[:-1]] + [f_last]
+        names = self._phase_names(steps)
         c = max(1, plan.n_chunks)
         if c == 1:
-            return self._run_phases([x], fns)[0]
+            return self._run_phases([x], fns, op="allgather",
+                                    phase_names=names)[0]
         s_len = x.shape[0]
         sc = ceil_div(s_len, c)
         pad = c * sc - s_len
@@ -1078,7 +1282,8 @@ class CollectiveEngine:
             widths[0] = (0, pad)
             xp = jnp.pad(x, widths)
         chunks = [xp[k * sc:(k + 1) * sc] for k in range(c)]
-        chunks = self._run_phases(chunks, fns)
+        chunks = self._run_phases(chunks, fns, op="allgather",
+                                  phase_names=names)
         return self._join_row_chunks(chunks, p, s_len)
 
     def all_to_all_multi(self, x: jax.Array, axes: Sequence[str],
@@ -1101,6 +1306,17 @@ class CollectiveEngine:
             if algorithm in planner.ALL_TO_ALL_SHAPES:
                 algorithm = "auto"
             return self.all_to_all_inside(x, axes[0], algorithm)
+        if not obs_trace.get_tracer().enabled:
+            return self._all_to_all_multi(x, axes, algorithm)
+        with self._collective_span("all_to_all_multi", "all_to_all",
+                                   axes, x.size * x.dtype.itemsize,
+                                   algorithm) as sp:
+            out = self._all_to_all_multi(x, axes, algorithm)
+            self._finish_collective(sp, out, algorithm)
+            return out
+
+    def _all_to_all_multi(self, x: jax.Array, axes: Tuple[str, ...],
+                          algorithm: str) -> jax.Array:
         if algorithm == "lax":
             return lax.all_to_all(x, axes, split_axis=0, concat_axis=0,
                                   tiled=True)
@@ -1179,14 +1395,17 @@ class CollectiveEngine:
         ``n_chunks > 1`` each block contributes a row slice per chunk
         and the phases run as a wavefront pipeline."""
         fns = self._a2a_phase_fns(axes, sizes, steps)
+        names = self._phase_names(steps)
         c = max(1, n_chunks)
         if c == 1:
-            return self._run_phases([x], fns)[0]
+            return self._run_phases([x], fns, op="all_to_all",
+                                    phase_names=names)[0]
         p = 1
         for s in sizes:
             p *= s
         chunks, m = self._split_row_chunks(x, p, c)
-        chunks = self._run_phases(chunks, fns)
+        chunks = self._run_phases(chunks, fns, op="all_to_all",
+                                  phase_names=names)
         return self._join_row_chunks(chunks, p, m)
 
     # ------------------------------------------------------------------ #

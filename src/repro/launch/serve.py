@@ -25,8 +25,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import init_params
 from repro.models.frontend import vision_patches
+from repro.obs import cli as obs_cli
 from repro.serving import (ContinuousBatchingServer as BatchedServer,
                            Request, SamplingParams)
+from repro.serving.telemetry import ttft_low_confidence
 
 
 def main():
@@ -44,7 +46,9 @@ def main():
                     help="stripe the slot rows over all local devices "
                          "and route token sync through the "
                          "CollectiveEngine")
+    obs_cli.add_obs_args(ap)
     args = ap.parse_args()
+    obs_cli.begin(args.trace, args.obs_report, args.metrics_out)
 
     cfg = get_config(args.arch).reduced()
     from repro.models import supports_paged
@@ -88,13 +92,23 @@ def main():
     total = sum(len(v) for v in results.values())
     print(f"[serve] {len(results)} requests, {total} tokens in {dt:.1f}s "
           f"({total / dt:.1f} tok/s)")
+    lc = (f" (low confidence, n={snap.ttft_samples})"
+          if ttft_low_confidence(snap) else "")
     print(f"[serve] ttft p50={snap.ttft_p50_ms:.0f}ms "
-          f"p99={snap.ttft_p99_ms:.0f}ms | decode steps "
+          f"p99={snap.ttft_p99_ms:.0f}ms{lc} | decode steps "
           f"{snap.decode_steps} | prefill chunks {snap.prefill_chunks} | "
           f"preemptions {snap.preemptions} | peak kv occupancy "
           f"{snap.kv_peak_occupancy:.2f}")
     for rid in sorted(results)[:3]:
         print(f"  req {rid}: {results[rid][:8]}...")
+    if mesh is not None:
+        with mesh:
+            obs_cli.finish(args.trace, args.obs_report, args.metrics_out,
+                           mesh=mesh, telemetry_snapshot=snap,
+                           label="serve")
+    else:
+        obs_cli.finish(args.trace, args.obs_report, args.metrics_out,
+                       telemetry_snapshot=snap, label="serve")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
+from repro.obs import cli as obs_cli
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models import init_params
@@ -74,7 +75,10 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
         ckpt_every: int = 50, lr: float = 3e-4, microbatches: int = 1,
         log_every: int = 10, resume: bool = True, dp: bool = False,
         grad_sync_mode: str = "allreduce", fabric_spec: str | None = None,
-        moe_ep: str | None = None, num_experts: int | None = None):
+        moe_ep: str | None = None, num_experts: int | None = None,
+        trace: str | None = None, obs_report: bool = False,
+        metrics_out: str | None = None):
+    obs_cli.begin(trace, obs_report, metrics_out)
     if fabric_spec:
         topo = install_fabric_topology(fabric_spec)
         print(f"[train] fabric topology: {topo.describe()}")
@@ -177,6 +181,12 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
     print(f"[train] done: {len(losses)} steps in "
           f"{time.time() - t_start:.1f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if mesh is not None:
+        with mesh:
+            obs_cli.finish(trace, obs_report, metrics_out, mesh=mesh,
+                           label="train")
+    else:
+        obs_cli.finish(trace, obs_report, metrics_out, label="train")
     return losses
 
 
@@ -214,12 +224,15 @@ def main():
     ap.add_argument("--experts", type=int, default=None,
                     help="override num_experts (e.g. to tile the "
                          "8-virtual-device EP world under --reduced)")
+    obs_cli.add_obs_args(ap)
     args = ap.parse_args()
     run(args.arch, args.steps, args.batch, args.seq, reduced=args.reduced,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
         microbatches=args.microbatches, dp=args.dp,
         grad_sync_mode=args.grad_sync, fabric_spec=args.fabric,
-        moe_ep=args.moe_ep, num_experts=args.experts)
+        moe_ep=args.moe_ep, num_experts=args.experts,
+        trace=args.trace, obs_report=args.obs_report,
+        metrics_out=args.metrics_out)
 
 
 if __name__ == "__main__":

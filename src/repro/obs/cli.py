@@ -1,0 +1,111 @@
+"""Observability flags shared by the launch drivers.
+
+``launch/train.py`` and ``launch/serve.py`` expose the same three
+flags; this module owns their lifecycle so the drivers stay thin:
+
+* ``--trace PATH`` -- collect engine spans and export Chrome-trace
+  JSON (load in ``chrome://tracing`` / Perfetto, or feed to
+  ``benchmarks/obs_report.py``).
+* ``--obs-report`` -- print the predicted-vs-measured model-error
+  table after the run.
+* ``--metrics-out PATH`` -- dump the process metrics registry
+  (engine cache stats, serving telemetry when present) as JSON.
+
+``begin()`` before the run enables tracing when any flag asks for it;
+``finish()`` after the run backfills measured wall time by replaying
+each unique collective signature on the mesh (the hot-path spans are
+recorded at jit trace time, so they carry no wall time of their own),
+then writes the requested artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+from repro.obs import trace as obs_trace
+from repro.obs import registry as obs_registry
+from repro.obs import model_error as obs_model_error
+
+
+def add_obs_args(ap) -> None:
+    """Install ``--trace`` / ``--obs-report`` / ``--metrics-out`` on an
+    ``argparse`` parser."""
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    dest="trace",
+                    help="export engine collective spans as "
+                         "Chrome-trace JSON to PATH (each span carries "
+                         "the chosen plan, cache status, predicted "
+                         "cost, and replay-measured wall time)")
+    ap.add_argument("--obs-report", action="store_true",
+                    dest="obs_report",
+                    help="print the predicted-vs-measured model-error "
+                         "table after the run (implies span tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    dest="metrics_out",
+                    help="dump the process metrics registry (engine "
+                         "stats, serving telemetry) as JSON to PATH")
+
+
+def wants_obs(trace: Optional[str], obs_report: bool,
+              metrics_out: Optional[str]) -> bool:
+    return bool(trace or obs_report or metrics_out)
+
+
+def begin(trace: Optional[str] = None, obs_report: bool = False,
+          metrics_out: Optional[str] = None) -> bool:
+    """Enable span collection when any obs flag asks for it.  Returns
+    whether observability is active (callers pass that to
+    :func:`finish`)."""
+    if not wants_obs(trace, obs_report, metrics_out):
+        return False
+    if trace or obs_report:
+        obs_trace.enable_tracing(measure=True)
+    return True
+
+
+def finish(trace: Optional[str] = None, obs_report: bool = False,
+           metrics_out: Optional[str] = None, mesh=None, engine=None,
+           telemetry_snapshot: Any = None, label: str = "run",
+           replay_repeats: int = 3) -> None:
+    """Write the artifacts the obs flags asked for.
+
+    ``mesh`` (when the run had one) drives the measured replay that
+    backfills wall time into jit-traced spans; ``engine`` defaults to
+    the process engine; ``telemetry_snapshot`` (serving) is exported
+    into the registry alongside the engine stats."""
+    if not wants_obs(trace, obs_report, metrics_out):
+        return
+    tracer = obs_trace.get_tracer()
+    spans = tracer.spans
+    if (trace or obs_report) and mesh is not None and spans:
+        from repro.obs import replay
+        measured = replay.measure_spans(spans, mesh, engine=engine,
+                                        repeats=replay_repeats)
+        print(f"[{label}] obs: replayed {len(measured)} unique "
+              f"collective signatures for wall time")
+    if trace:
+        n = tracer.export_chrome(trace)
+        print(f"[{label}] obs: wrote {n} spans to {trace}")
+    if obs_report:
+        mon = obs_model_error.ModelErrorMonitor()
+        mon.observe_spans(spans)
+        print(mon.render_table())
+    if metrics_out:
+        if engine is None:
+            from repro.collectives.api import get_engine
+            engine = get_engine()
+        obs_registry.export_engine_stats(engine)
+        if telemetry_snapshot is not None:
+            from repro.serving.telemetry import export_to_registry
+            export_to_registry(telemetry_snapshot)
+        d = os.path.dirname(os.path.abspath(metrics_out))
+        os.makedirs(d, exist_ok=True)
+        with open(metrics_out, "w") as f:
+            json.dump(obs_registry.REGISTRY.export_json(), f, indent=2,
+                      sort_keys=True)
+        print(f"[{label}] obs: wrote metrics registry to {metrics_out}")
+
+
+__all__ = ["add_obs_args", "wants_obs", "begin", "finish"]

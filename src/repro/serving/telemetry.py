@@ -35,6 +35,7 @@ class TelemetrySnapshot:
     kv_occupancy: float
     kv_peak_occupancy: float
     kv_internal_frag_slots: int
+    ttft_samples: int = 0       # how many TTFTs back the percentiles
 
 
 class Telemetry:
@@ -98,6 +99,7 @@ class Telemetry:
                          if ttft.size else None),
             ttft_p99_ms=(float(np.percentile(ttft, 99)) * 1e3
                          if ttft.size else None),
+            ttft_samples=int(ttft.size),
             kv_blocks_total=allocator.capacity,
             kv_blocks_used=allocator.num_used,
             kv_occupancy=allocator.occupancy,
@@ -108,4 +110,59 @@ class Telemetry:
         )
 
 
-__all__ = ["Telemetry", "TelemetrySnapshot"]
+#: below this many TTFT samples the percentiles are statistically
+#: shaky; exporters keep them but mark them low-confidence.
+TTFT_LOW_CONFIDENCE = 20
+
+
+def ttft_low_confidence(snap: TelemetrySnapshot) -> bool:
+    """True when the snapshot's TTFT percentiles rest on too few
+    samples to trust (fewer than :data:`TTFT_LOW_CONFIDENCE`)."""
+    return snap.ttft_samples < TTFT_LOW_CONFIDENCE
+
+
+def export_to_registry(snap: TelemetrySnapshot, registry=None,
+                       prefix: str = "serve"):
+    """Mirror a snapshot into a :class:`repro.obs.MetricsRegistry`
+    (the process-wide one by default).  Returns the registry.
+
+    Percentile gauges are exported alongside ``{prefix}_ttft_samples``
+    and a 0/1 ``{prefix}_ttft_low_confidence`` flag rather than being
+    suppressed -- consumers decide what a thin sample base means."""
+    from repro.obs import registry as obs_registry
+    reg = registry if registry is not None else obs_registry.REGISTRY
+
+    def g(name: str, value, help_: str) -> None:
+        if value is None:
+            return
+        reg.gauge(f"{prefix}_{name}", help=help_).set(float(value))
+
+    g("elapsed_s", snap.elapsed_s, "serving loop wall time")
+    g("steps", snap.steps, "scheduler iterations")
+    g("decode_steps", snap.decode_steps, "decode batches launched")
+    g("prefill_chunks", snap.prefill_chunks, "prefill chunks executed")
+    g("submitted", snap.submitted, "requests submitted")
+    g("finished", snap.finished, "requests finished")
+    g("preemptions", snap.preemptions, "requests preempted")
+    g("queue_depth", snap.queue_depth, "requests waiting")
+    g("active", snap.active, "requests in flight")
+    g("tokens_out", snap.tokens_out, "tokens generated")
+    g("tok_per_s", snap.tok_per_s, "generation throughput")
+    g("ttft_p50_ms", snap.ttft_p50_ms, "median time to first token")
+    g("ttft_p99_ms", snap.ttft_p99_ms, "p99 time to first token")
+    g("ttft_samples", snap.ttft_samples,
+      "TTFT observations behind the percentiles")
+    g("ttft_low_confidence", int(ttft_low_confidence(snap)),
+      f"1 when ttft_samples < {TTFT_LOW_CONFIDENCE}")
+    g("kv_blocks_total", snap.kv_blocks_total, "KV pool capacity")
+    g("kv_blocks_used", snap.kv_blocks_used, "KV blocks in use")
+    g("kv_occupancy", snap.kv_occupancy, "KV pool occupancy")
+    g("kv_peak_occupancy", snap.kv_peak_occupancy,
+      "peak KV pool occupancy")
+    g("kv_internal_frag_slots", snap.kv_internal_frag_slots,
+      "slots lost to block-internal fragmentation")
+    return reg
+
+
+__all__ = ["Telemetry", "TelemetrySnapshot", "TTFT_LOW_CONFIDENCE",
+           "ttft_low_confidence", "export_to_registry"]

@@ -39,6 +39,11 @@ GATED = {
     "prefill_chunks": "higher_worse",
     "preemptions": "higher_worse",
     "tokens_out": "lower_worse",
+    # decode: latency-regime selection + model prices (declared
+    # constants, so deterministic) and post-calibration drift
+    "latency_selected": "lower_worse",
+    "predicted_cycles": "higher_worse",
+    "drifted_bins": "higher_worse",
 }
 
 #: reported for context only (timing noise)

@@ -39,6 +39,7 @@ PAIRS: Tuple[Tuple[str, str], ...] = (
     ("BENCH_moe_ep.json", "benchmarks/baselines/moe_ep_small.json"),
     ("BENCH_serve.json", "benchmarks/baselines/serve.json"),
     ("BENCH_pipeline.json", "benchmarks/baselines/pipeline_small.json"),
+    ("BENCH_decode.json", "benchmarks/baselines/decode_small.json"),
 )
 
 

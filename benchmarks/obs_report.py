@@ -14,6 +14,15 @@ drift flags.
 span carries the required args (op, axes, bytes, plan, cache,
 predicted, measured_s, mode) and exits non-zero listing the
 violations, printing nothing else on success.
+
+``--check-small-b`` is the latency-regime gate: the decode-sized
+payloads (bytes-decile <= ``--small-b-max-decile``, default 3 = under
+10 KiB) are where per-phase launch overhead dominates and the planner's
+one-shot latency plans run, so a trace must (a) contain at least one
+scored small-B bin -- the hot path really was observed with
+predicted+measured pairs -- and (b) show none of those bins drifted
+past the threshold.  A drifting small-B bin means the launch constants
+no longer describe the hardware: rerun ``engine.calibrate_launch``.
 """
 
 from __future__ import annotations
@@ -43,6 +52,12 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="schema gate: validate span conformance and "
                          "exit 1 on problems")
+    ap.add_argument("--check-small-b", action="store_true",
+                    help="latency-regime gate: require scored small-B "
+                         "bins and fail on small-B drift")
+    ap.add_argument("--small-b-max-decile", type=int, default=3,
+                    help="largest bytes-decile counted as small B "
+                         "(default 3: payloads under 10 KiB)")
     args = ap.parse_args(argv)
 
     spans = load_chrome_trace(args.trace)
@@ -55,6 +70,32 @@ def main(argv=None) -> int:
             return 1
         n = sum(1 for sp in spans if sp.cat == "collective")
         print(f"[obs-report] OK: {n} collective spans conform")
+        return 0
+
+    if args.check_small_b:
+        mon = ModelErrorMonitor(threshold=args.threshold,
+                                min_samples=args.min_samples,
+                                seconds_per_cycle=args.seconds_per_cycle)
+        mon.observe_spans(spans)
+        small = [b for (op, topo, decile), b in sorted(mon.bins.items())
+                 if decile <= args.small_b_max_decile]
+        if not any(b.n > 0 for b in small):
+            print(f"[obs-report] FAIL: no small-B bins (decile <= "
+                  f"{args.small_b_max_decile}) observed -- the decode "
+                  f"hot path left no predicted+measured spans",
+                  file=sys.stderr)
+            return 1
+        drifted = [b for b in small if b.drifted]
+        if drifted:
+            for b in drifted:
+                print(f"[obs-report] FAIL: small-B drift {b.op}/{b.topo} "
+                      f"decile {b.decile}: "
+                      f"{(b.rolling_error or 0) * 100:.1f}% > "
+                      f"{args.threshold * 100:.1f}% -- rerun "
+                      f"engine.calibrate_launch()", file=sys.stderr)
+            return 1
+        print(f"[obs-report] OK: {len(small)} small-B bin(s), "
+              f"{sum(b.n for b in small)} observation(s), none drifted")
         return 0
 
     mon = ModelErrorMonitor(threshold=args.threshold,

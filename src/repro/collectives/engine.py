@@ -54,6 +54,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core.autogen import autogen_tree, cache_dir, compute_tables
 from repro.core.model import (Fabric, FabricTopology, TPU_V5E_AXIS,
                               as_topology, ceil_div)
+from repro.core import patterns as pat
 from repro.core import selector
 from repro.obs import trace as obs_trace
 from repro.collectives import planner
@@ -65,7 +66,9 @@ ICI_ELEMENT_BYTES = 512
 #: bump when the cost model changes (patterns/selector/planner) so
 #: persisted decisions computed under the old model stop being served.
 #: v2: chunk-pipelined plan candidates + overlap-aware lower bounds.
-MODEL_VERSION = 2
+#: v3: per-launch overhead terms (Fabric.t_launch) + the one-shot
+#: latency-regime candidates ("oneshot" algorithm, "latency" plan shape).
+MODEL_VERSION = 3
 
 #: persisted-file layout version.  v2 keys decisions by the full
 #: topology signature (``op|t=2x8|B=...``) instead of the bare axis size
@@ -179,14 +182,16 @@ def measure_ppermute(mesh: Mesh, axis: str,
 
 def fabric_to_dict(f: Fabric) -> Dict[str, Any]:
     return {"name": f.name, "t_r": f.t_r, "store_cost": f.store_cost,
-            "link_bw": f.link_bw, "multicast": f.multicast}
+            "link_bw": f.link_bw, "multicast": f.multicast,
+            "t_launch": f.t_launch}
 
 
 def _fabric_from_dict(d: Dict[str, Any]) -> Fabric:
     return Fabric(name=str(d["name"]), t_r=float(d["t_r"]),
                   store_cost=float(d["store_cost"]),
                   link_bw=float(d.get("link_bw", 1.0)),
-                  multicast=bool(d.get("multicast", True)))
+                  multicast=bool(d.get("multicast", True)),
+                  t_launch=float(d.get("t_launch", 0.0)))
 
 
 def topology_to_dict(t: FabricTopology) -> Dict[str, Any]:
@@ -297,7 +302,7 @@ class CollectiveEngine:
         self._last_save = 0.0
         self.stats = {"hits": 0, "misses": 0, "dp_runs": 0,
                       "persisted_loads": 0, "plan_hits": 0,
-                      "plan_misses": 0}
+                      "plan_misses": 0, "latency_dispatches": 0}
         if persist:
             atexit.register(self.flush)
 
@@ -312,8 +317,14 @@ class CollectiveEngine:
     # ------------------------------------------------------------------ #
     @staticmethod
     def _fabric_one_tag(f: Fabric) -> str:
-        return (f"{f.name}_tr{f.t_r:g}_st{f.store_cost:g}"
-                f"_bw{f.link_bw:g}_mc{int(f.multicast)}")
+        tag = (f"{f.name}_tr{f.t_r:g}_st{f.store_cost:g}"
+               f"_bw{f.link_bw:g}_mc{int(f.multicast)}")
+        # uncalibrated fabrics keep the exact pre-t_launch tag, so
+        # existing cache files stay valid until a launch calibration
+        # actually moves the constants
+        if f.t_launch != 0.0:
+            tag += f"_tl{f.t_launch:g}"
+        return tag
 
     def _fabric_tag(self) -> str:
         """Cache namespace: the full topology signature.  A uniform
@@ -696,6 +707,78 @@ class CollectiveEngine:
             self._loaded = False
         return result
 
+    def calibrate_launch(self,
+                         samples: Sequence[Tuple[str, int, int, str, float]]
+                         ) -> float:
+        """Fit ``Fabric.t_launch`` from measured collective wall times.
+
+        ``samples`` is ``[(op, p, nbytes, algorithm, seconds), ...]`` --
+        exactly what ``obs.replay.measure_spans`` produces for decode
+        traces (``nbytes`` in the model's convention: global bytes for
+        allgather).  Under the model a run costs
+        ``seconds = cycle * (base_i + t_launch * L_i)`` where ``base_i``
+        is the closed form at ``t_launch = 0`` and ``L_i`` the number of
+        sequential program launches (:func:`patterns.launch_count`), so
+        a two-column least squares over ``(base_i, L_i)`` recovers the
+        seconds-per-cycle scale ``c`` and the per-launch seconds ``d``;
+        ``t_launch = d / c`` converts back to model cycles.  Mixing
+        sizes *and* algorithms with different launch counts is what
+        makes the two columns separable -- an all-oneshot sample set
+        cannot identify the constant.
+
+        The engine's topology moves to the fitted constant (every
+        per-axis fabric gets the same ``t_launch``: launch overhead is a
+        host/framework property, not a per-link one), the cache
+        namespace moves with it, and stale decisions are dropped.
+        Returns the fitted ``t_launch`` (cycles, >= 0)."""
+        samples = list(samples)
+        if len(samples) < 2:
+            raise ValueError("calibrate_launch() needs >= 2 samples")
+        rows, secs = [], []
+        base_fab = dataclasses.replace(self.topology.default,
+                                       t_launch=0.0)
+        for op, p, nbytes, algorithm, seconds in samples:
+            b = self._elements(int(nbytes))
+            preds = selector.predict_collective(op, int(p), b, base_fab,
+                                                include_autogen=False)
+            if algorithm not in preds:
+                raise ValueError(
+                    f"calibrate_launch(): no closed form for "
+                    f"{op!r}/{algorithm!r} at P={p}")
+            rows.append((preds[algorithm],
+                         pat.launch_count(op, algorithm, int(p))))
+            secs.append(float(seconds))
+        a = np.array(rows, dtype=np.float64)
+        y = np.array(secs, dtype=np.float64)
+        if np.ptp(a[:, 1]) == 0.0:
+            raise ValueError(
+                "calibrate_launch(): all samples have the same launch "
+                "count; mix algorithms/sizes so the per-launch column "
+                "is identifiable")
+        (c, d), *_ = np.linalg.lstsq(a, y, rcond=None)
+        if c <= 0.0:
+            raise ValueError(
+                "calibrate_launch(): non-positive fitted cycle scale; "
+                "timings are noise-dominated -- use larger sizes or "
+                "more repeats")
+        t_launch = max(float(d / c), 0.0)
+        with self._lock:
+            new_default = dataclasses.replace(self.topology.default,
+                                              t_launch=t_launch)
+            new_axes = tuple(
+                (axis, dataclasses.replace(f, t_launch=t_launch))
+                for axis, f in self.topology.axis_fabrics)
+            self.topology = FabricTopology(default=new_default,
+                                           axis_fabrics=new_axes,
+                                           name=self.topology.name)
+            # constants changed => cache namespace moved; in-memory
+            # decisions and plans predate the fitted t_launch
+            self._decisions.clear()
+            self._plans.clear()
+            self._tree_rounds.clear()
+            self._loaded = False
+        return t_launch
+
     # ------------------------------------------------------------------ #
     # dispatch: *_inside run under an existing shard_map axis binding
     # ------------------------------------------------------------------ #
@@ -725,9 +808,18 @@ class CollectiveEngine:
         if algorithm == "auto":
             d, hit = self._select_meta(op, nbytes, p, fabric=fab)
             sp.set(algorithm=d.algorithm, predicted=float(d.predicted),
-                   cache="hit" if hit else "miss")
+                   cache="hit" if hit else "miss",
+                   regime=("latency" if d.algorithm == "oneshot"
+                           else "bandwidth"))
+            if d.algorithm == "oneshot":
+                with self._lock:
+                    self.stats["latency_dispatches"] += 1
             return d.algorithm, d.rounds
-        sp.set(algorithm=algorithm, algorithm_forced=True, cache="forced")
+        sp.set(algorithm=algorithm, algorithm_forced=True, cache="forced",
+               regime="latency" if algorithm == "oneshot" else "bandwidth")
+        if algorithm == "oneshot":
+            with self._lock:
+                self.stats["latency_dispatches"] += 1
         if algorithm in ("autogen", "autogen_pipelined"):
             b = self._tree_elements(op, self._elements(nbytes), p)
             return algorithm, self.tree_rounds(p, b, fabric=fab)
@@ -816,6 +908,10 @@ class CollectiveEngine:
             return x
         algorithm, rounds = self._resolve(
             "allreduce", x.size * x.dtype.itemsize, p, algorithm, axis)
+        if algorithm == "oneshot":
+            # the latency regime: one fused XLA program over the (possibly
+            # folded) axis -- depth 1, a single launch, no staging
+            return lax.psum(x, axis)
         if algorithm == "ring":
             flat = x.reshape(-1)
             return impl.ring_allreduce(flat, axis).reshape(x.shape)
@@ -881,7 +977,10 @@ class CollectiveEngine:
             algorithm, rounds = self._resolve(
                 "allgather", x.size * x.dtype.itemsize * p, p, algorithm,
                 axis)
-        if algorithm == "all_gather":
+        if algorithm in ("all_gather", "oneshot"):
+            # "oneshot" is the latency-regime selection of the same
+            # single-program gather ("all_gather" is the forced native
+            # path that bypasses the model)
             return lax.all_gather(x, axis, tiled=True)
         if algorithm == "ring":
             return impl.allgather_ring(x, axis)
@@ -919,6 +1018,9 @@ class CollectiveEngine:
                                   tiled=True)
         algorithm, _ = self._resolve(
             "all_to_all", x.size * x.dtype.itemsize, p, algorithm, axis)
+        if algorithm == "oneshot":
+            return lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
         if algorithm == "ring":
             return impl.all_to_all_ring(x, axis)
         if algorithm == "halving":
@@ -1101,7 +1203,10 @@ class CollectiveEngine:
         if plan.shape == "2d_snake":
             (step,) = plan.steps
             return impl.snake_allreduce_2d(x, step.axes)
-        if plan.shape == "flat":
+        if plan.shape in ("flat", "latency"):
+            # both are one step over the folded axis tuple; "latency"
+            # carries the "oneshot" algorithm, dispatched as a single
+            # fused XLA collective (no chunking, no cascade)
             (step,) = plan.steps
             return self.allreduce_inside(x, step.axes, step.algorithm)
         base = planner.base_shape(plan.shape)
@@ -1251,7 +1356,7 @@ class CollectiveEngine:
         shape = None if algorithm == "auto" else algorithm
         plan = self.plan_multi("allgather", axes, sizes, nbytes,
                                shape=shape)
-        if plan.shape == "flat":
+        if plan.shape in ("flat", "latency"):
             (step,) = plan.steps
             return self.allgather_inside(x, step.axes, step.algorithm)
         # cascade: outermost-first growth, then undo the chunk
@@ -1332,7 +1437,7 @@ class CollectiveEngine:
             shape = None if algorithm == "auto" else algorithm
             plan = self.plan_multi("all_to_all", axes, sizes, nbytes,
                                    shape=shape)
-            if plan.shape == "flat":
+            if plan.shape in ("flat", "latency"):
                 (step,) = plan.steps
                 return self.all_to_all_inside(x, step.axes,
                                               step.algorithm)
@@ -1407,6 +1512,103 @@ class CollectiveEngine:
         chunks = self._run_phases(chunks, fns, op="all_to_all",
                                   phase_names=names)
         return self._join_row_chunks(chunks, p, m)
+
+    # ------------------------------------------------------------------ #
+    # fused compute + collective: matmul feeding a ring reduce-scatter
+    # ------------------------------------------------------------------ #
+    def price_fused_matmul_rs(self, m: int, k: int, n: int, p: int,
+                              axes: Any = None, dtype_bytes: int = 4
+                              ) -> Dict[str, float]:
+        """Model prices for the fused vs serialized matmul+RS.
+
+        ``[m, k] @ [k, n]`` per device, reduce-scattered over a P-way
+        axis (``axes`` resolves the fabric on a heterogeneous topology;
+        a tuple folds to the slowest member, as the planner prices flat
+        phases).  ``fused`` is the PR 6 overlap closed form with C = P
+        chunks (``patterns.t_fused_matmul_rs``); ``serial`` is the full
+        GEMM followed by the best cached reduce-scatter decision.
+        ``saved`` > 0 is the model saying the block GEMMs are long
+        enough to hide the ring hops -- the bit ``"auto"`` dispatch
+        acts on."""
+        if isinstance(axes, (tuple, list)):
+            axes = tuple(axes)
+        fab = self.topology.for_axis(axes)
+        nbytes = int(m) * int(n) * int(dtype_bytes)
+        t_mm = pat.t_matmul(m, k, n)
+        fused = pat.t_fused_matmul_rs(p, self._elements(nbytes), t_mm,
+                                      fab)
+        rs = self.select("reduce_scatter", nbytes, p, fabric=fab)
+        serial = t_mm + rs.predicted
+        return {"fused": float(fused), "serial": float(serial),
+                "saved": float(serial - fused), "t_mm": float(t_mm),
+                "t_rs": float(rs.predicted)}
+
+    def fused_matmul_reduce_scatter(self, x: jax.Array,
+                                    w: Optional[jax.Array], axes, *,
+                                    algorithm: str = "auto",
+                                    block_m: Optional[int] = None,
+                                    block_n: Optional[int] = None,
+                                    interpret: bool = True) -> jax.Array:
+        """``reduce_scatter(x @ w)`` over ``axes`` with the GEMM tiles
+        overlapping the ring's wire time, run inside shard_map.
+
+        ``x``: local ``[M, K_loc]``; ``w``: local ``[K_loc, N]`` (the
+        contraction dim sharded over ``axes``); returns ``[M/P, N]``
+        with device ``i`` holding row block ``i`` of the summed product
+        (``lax.psum_scatter(..., tiled=True)`` semantics).
+
+        ``algorithm``: ``"auto"`` runs the fused ring exactly when the
+        model prices it below the serialized GEMM-then-RS
+        (:meth:`price_fused_matmul_rs`); ``"fused"`` / ``"unfused"``
+        force either path.  ``w=None`` means the call site has no local
+        GEMM to fuse (the FSDP grad-sync reduce-scatter) and the call
+        degenerates to the engine's chunk-overlapped reduce-scatter
+        over the same axes -- the same opt-in flag covers both sites.
+        Shapes the ring cannot tile (M not divisible by P) fall back to
+        the gathered path."""
+        from repro.kernels import fused_matmul_rs as fk
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        if w is None:
+            if len(axes) == 1:
+                return self.reduce_scatter_inside(x, axes[0], algorithm)
+            return self.reduce_scatter_multi(x, axes, algorithm)
+        axis = axes[0] if len(axes) == 1 else axes
+        p = impl._axis_size(axis)
+        m, k = x.shape
+        n = w.shape[-1]
+        price = self.price_fused_matmul_rs(
+            m, k, n, p, axes=axis, dtype_bytes=x.dtype.itemsize)
+        if algorithm == "fused":
+            use_fused = True
+        elif algorithm == "unfused":
+            use_fused = False
+        else:
+            use_fused = price["saved"] > 0.0
+        if m % max(p, 1) != 0:
+            use_fused = False       # ring cannot tile the rows
+        kwargs: Dict[str, Any] = {"interpret": interpret}
+        if block_m is not None:
+            kwargs["block_m"] = block_m
+        if block_n is not None:
+            kwargs["block_n"] = block_n
+
+        def run() -> jax.Array:
+            if use_fused:
+                return fk.fused_matmul_rs(x, w, axis, **kwargs)
+            return fk.matmul_then_rs(x, w, axis)
+
+        if not obs_trace.get_tracer().enabled:
+            return run()
+        with self._collective_span("fused_matmul_rs", "fused_matmul_rs",
+                                   axes, m * n * x.dtype.itemsize,
+                                   algorithm) as sp:
+            sp.set(algorithm="fused_ring" if use_fused else "unfused",
+                   algorithm_forced=algorithm != "auto", cache="model",
+                   predicted=price["fused" if use_fused else "serial"],
+                   overlap_saved=price["saved"])
+            out = run()
+            self._finish_collective(sp, out, algorithm)
+            return out
 
     # ------------------------------------------------------------------ #
     # outer wrappers: build the shard_map for replicated operands

@@ -21,6 +21,11 @@ implemented multi-axis composition under Eq. (1):
   boustrophedon order of the grid, plus the same 2D broadcast.
 * ``flat``         -- the best 1D algorithm over the axes folded into a
   single logical axis (row-major), the ``psum((a, b))`` shape.
+* ``latency``      -- the small-B latency regime: one single-shot
+  program over the folded axis (depth 1, a single launch -- the
+  ``t_oneshot_*`` closed forms).  Pays extra wire volume for minimal
+  launch/depth overhead, so the model selects it exactly below the
+  crossover where decode-sized payloads live.
 
 Every multi-phase shape additionally grows a ``<shape>_pipelined``
 candidate: the payload is sliced into ``n_chunks`` pieces and the
@@ -79,12 +84,14 @@ from repro.core.selector import t_broadcast_2d_fabric
 
 #: shapes a multi-axis allreduce plan may take
 ALLREDUCE_SHAPES = ("sequential", "hierarchical", "2d_xy", "2d_snake",
-                    "flat", "sequential_pipelined",
+                    "flat", "latency", "sequential_pipelined",
                     "hierarchical_pipelined")
 #: shapes a multi-axis reduce_scatter / allgather plan may take
-SHARDED_SHAPES = ("cascade", "flat", "cascade_pipelined")
+#: ("latency" is offered for allgather only: the latency regime has no
+#: single-program reduce_scatter primitive distinct from the cascade)
+SHARDED_SHAPES = ("cascade", "flat", "latency", "cascade_pipelined")
 #: shapes a multi-axis all_to_all plan may take
-ALL_TO_ALL_SHAPES = ("hierarchical", "sequential", "flat",
+ALL_TO_ALL_SHAPES = ("hierarchical", "sequential", "flat", "latency",
                      "hierarchical_pipelined", "sequential_pipelined")
 
 #: chunk counts a ``*_pipelined`` candidate considers; the model keeps
@@ -411,6 +418,48 @@ def _score_flat(op: str, sizes: Sequence[int], nbytes: int,
     return d.predicted, steps, axis_bytes, [(d.predicted, eff_idx)]
 
 
+_ONESHOT_FORMS = {"allreduce": pat.t_oneshot_allreduce,
+                  "allgather": pat.t_oneshot_allgather,
+                  "all_to_all": pat.t_oneshot_all_to_all}
+
+
+def _score_latency(op: str, sizes: Sequence[int], nbytes: int,
+                   element_bytes: int, fabs: AxisFabrics
+                   ) -> ScoredShape:
+    """The small-B latency regime: one single-shot program over all
+    effective axes folded into one logical axis -- depth 1, a single
+    launch, no store-and-forward staging.  Priced by the ``t_oneshot_*``
+    closed forms (``core/patterns.py``) at the slowest member fabric
+    (the folded exchange may route any hop over any axis).  Pays more
+    wire volume than the bandwidth-optimal shapes (no reuse of
+    forwarded data), so it only wins below the crossover where
+    per-phase launch/depth overhead dominates -- exactly the decode
+    regime.  The engine dispatches it as one fused XLA collective over
+    the joint axis tuple (``_allreduce_inside`` et al., algorithm
+    ``"oneshot"``)."""
+    eff = _effective(sizes)
+    p = 1
+    for _, s in eff:
+        p *= s
+    eff_idx = tuple(i for i, _ in eff)
+    slow = slowest_fabric(*(fabs[i] for i in eff_idx))
+    b = _elements(nbytes, element_bytes)
+    t = _ONESHOT_FORMS[op](p, b, slow)
+    steps = [PlanStep(op, tuple(range(len(sizes))), "oneshot", nbytes)]
+    if op == "allreduce":
+        # all-broadcast + local K-way reduce: every device unicasts its
+        # full vector to the p-1 others (no multicast reuse)
+        per_axis = float(nbytes) * (p - 1)
+    else:
+        # allgather (nbytes = global result) / all_to_all (nbytes =
+        # per-device shard): each device injects its (p-1)/p share once
+        per_axis = _wire_bytes(float(nbytes), p)
+    axis_bytes = {i: per_axis for i in eff_idx}
+    # one phase occupying every effective axis's links: nothing to
+    # overlap, so latency never grows a pipelined variant
+    return t, steps, axis_bytes, [(t, eff_idx)]
+
+
 def _score_hierarchical(sizes: Sequence[int], nbytes: int,
                         fabric: Fabric, element_bytes: int,
                         select: SelectFn, fabs: AxisFabrics
@@ -523,6 +572,8 @@ def _plan_allreduce(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
     shapes["sequential"] = (t, steps, ab)
 
     if len(eff) >= 2:
+        shapes["latency"] = _score_latency("allreduce", sizes, nbytes,
+                                           element_bytes, fabs)[:3]
         f_t, f_steps, f_ab, _ = _score_flat("allreduce", sizes, nbytes,
                                             select, fabs)
         shapes["flat"] = (f_t, f_steps, f_ab)
@@ -618,6 +669,8 @@ def _plan_all_to_all(sizes: Tuple[int, ...], nbytes: int, fabric: Fabric,
             nbytes, select, fabs, list(reversed(eff)))[:3]
         shapes["sequential"] = _score_a2a_phases(nbytes, select, fabs,
                                                  list(eff))[:3]
+        shapes["latency"] = _score_latency("all_to_all", sizes, nbytes,
+                                           element_bytes, fabs)[:3]
         shapes["flat"] = _score_flat("all_to_all", sizes, nbytes, select,
                                      fabs)[:3]
         _add_pipelined(shapes, extras, "hierarchical", nbytes,
@@ -644,6 +697,9 @@ def _plan_sharded(op: str, sizes: Tuple[int, ...], nbytes: int,
     shapes["cascade"] = _score_cascade(op, sizes, nbytes, select,
                                        fabs)[:3]
     if len(eff) >= 2:
+        if op == "allgather":
+            shapes["latency"] = _score_latency(op, sizes, nbytes,
+                                               element_bytes, fabs)[:3]
         shapes["flat"] = _score_flat(op, sizes, nbytes, select, fabs)[:3]
         _add_pipelined(shapes, extras, "cascade", nbytes, element_bytes,
                        lambda cb: _score_cascade(op, sizes, cb, select,

@@ -65,6 +65,12 @@ class ArchConfig:
                                     # single-shot) or an engine
                                     # algorithm/plan shape ("auto",
                                     # "hierarchical", "ring", ...)
+    fused_tp: bool = False          # TP down-projection psum decomposed
+                                    # as reduce-scatter + allgather with
+                                    # the RS fused into the GEMM ring
+                                    # (kernels/fused_matmul_rs.py);
+                                    # launchers also flip the module
+                                    # switch via layers.set_fused_tp
     remat_policy: str = "full"      # full | dots | dots_no_batch
     grad_barrier: bool = False      # optimization_barrier on block-input
                                     # cotangents (keeps TP grad

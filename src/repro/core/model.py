@@ -49,6 +49,11 @@ class Fabric:
     store_cost: float   # cycles to store/add one received element
     link_bw: float = 1.0  # elements per cycle per link (WSE: 1)
     multicast: bool = True  # WSE routers replicate; ICI must software-fan-out
+    t_launch: float = 0.0  # per-launch host/framework overhead (cycles):
+    #                        dispatching one collective program, on top of
+    #                        the wire-side t_r the depth term already pays.
+    #                        0 until fitted (engine.calibrate_launch), so
+    #                        the bandwidth-regime prices are unchanged.
 
     @property
     def per_depth_cost(self) -> float:
@@ -81,7 +86,8 @@ def slowest_fabric(*fabrics: Fabric) -> Fabric:
     if not fabrics:
         raise ValueError("slowest_fabric() needs at least one fabric")
     return max(fabrics,
-               key=lambda f: (1.0 / f.link_bw, f.t_r, f.store_cost))
+               key=lambda f: (1.0 / f.link_bw, f.t_r, f.store_cost,
+                              f.t_launch))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,7 +179,8 @@ def _fabric_from_dict(d: Dict, base: Fabric) -> Fabric:
                   t_r=float(d.get("t_r", base.t_r)),
                   store_cost=float(d.get("store_cost", base.store_cost)),
                   link_bw=float(d.get("link_bw", base.link_bw)),
-                  multicast=bool(d.get("multicast", base.multicast)))
+                  multicast=bool(d.get("multicast", base.multicast)),
+                  t_launch=float(d.get("t_launch", base.t_launch)))
 
 
 def parse_fabric_topology(spec: str,
@@ -246,9 +253,12 @@ class CostTerms:
     contention: float
     links: float
     label: str = ""
+    launches: float = 0.0   # sequential program launches the pattern
+    #                         issues; each pays Fabric.t_launch
 
     def cycles(self, fabric: Fabric = WSE2) -> float:
-        """Paper Eq. (1), with wire terms scaled by the link bandwidth."""
+        """Paper Eq. (1), with wire terms scaled by the link bandwidth
+        and ``launches`` program dispatches each paying ``t_launch``."""
         bw = fabric.link_bw
         if self.links <= 0:
             bandwidth_term = self.distance
@@ -257,6 +267,7 @@ class CostTerms:
         return (
             max(self.contention / bw, bandwidth_term)
             + fabric.per_depth_cost * self.depth
+            + fabric.t_launch * self.launches
         )
 
     def dominant_term(self, fabric: Fabric = WSE2) -> str:
@@ -269,6 +280,7 @@ class CostTerms:
             "bandwidth": bandwidth,
             "distance": self.distance,
             "depth": fabric.per_depth_cost * self.depth,
+            "launch": fabric.t_launch * self.launches,
         }
         return max(parts, key=parts.get)
 

@@ -21,7 +21,8 @@ from repro.core import schedule as sched
 def t_message(p: int, b: int, fabric: Fabric = WSE2) -> float:
     """Sending a B-vector across a row of P PEs: T = B + P + 2*T_R."""
     terms = CostTerms(depth=1, distance=p - 1, energy=b * (p - 1),
-                      contention=b, links=max(p - 1, 1), label="message")
+                      contention=b, links=max(p - 1, 1), label="message",
+                      launches=1)
     return terms.cycles(fabric)
 
 
@@ -40,10 +41,12 @@ def t_star(p: int, b: int, fabric: Fabric = WSE2, refined: bool = True) -> float
     if p == 1:
         return 0.0
     if refined:
-        return b * (p - 1) / fabric.link_bw + 2 * fabric.t_r + fabric.store_cost
+        return (b * (p - 1) / fabric.link_bw + 2 * fabric.t_r
+                + fabric.store_cost + fabric.t_launch * (p - 1))
     terms = CostTerms(depth=1, distance=p - 1,
                       energy=b * p * (p - 1) / 2.0,
-                      contention=b * (p - 1), links=p - 1, label="star")
+                      contention=b * (p - 1), links=p - 1, label="star",
+                      launches=p - 1)
     return terms.cycles(fabric)
 
 
@@ -51,7 +54,8 @@ def t_chain(p: int, b: int, fabric: Fabric = WSE2) -> float:
     """Chain Reduce (Lemma 5.2): T = B + (2*T_R + 2)(P - 1)."""
     if p == 1:
         return 0.0
-    return b / fabric.link_bw + fabric.hop_pipeline_cost * (p - 1)
+    return (b / fabric.link_bw + fabric.hop_pipeline_cost * (p - 1)
+            + fabric.t_launch * (p - 1))
 
 
 def t_tree(p: int, b: int, fabric: Fabric = WSE2) -> float:
@@ -61,7 +65,8 @@ def t_tree(p: int, b: int, fabric: Fabric = WSE2) -> float:
     lg = log2i(p)
     bw = fabric.link_bw
     bandwidth = b * p / (2.0 * (p - 1)) * lg / bw + (p - 1)
-    return max(b * lg / bw, bandwidth) + fabric.per_depth_cost * lg
+    return (max(b * lg / bw, bandwidth) + fabric.per_depth_cost * lg
+            + fabric.t_launch * lg)
 
 
 def t_two_phase(p: int, b: int, fabric: Fabric = WSE2,
@@ -80,7 +85,7 @@ def t_two_phase(p: int, b: int, fabric: Fabric = WSE2,
     contention = 2 * b if (g > 1 and s > 1) else b
     terms = CostTerms(depth=depth, distance=p - 1, energy=energy,
                       contention=contention, links=p,
-                      label=f"two_phase(S={s})")
+                      label=f"two_phase(S={s})", launches=depth)
     return terms.cycles(fabric)
 
 
@@ -116,6 +121,8 @@ def t_reduce_then_broadcast(t_reduce: float, p: int, b: int,
 def t_allreduce(pattern: str, p: int, b: int, fabric: Fabric = WSE2) -> float:
     if pattern == "ring":
         return t_ring_allreduce(p, b, fabric)
+    if pattern == "oneshot":
+        return t_oneshot_allreduce(p, b, fabric)
     return t_reduce_then_broadcast(
         REDUCE_PATTERNS[pattern](p, b, fabric), p, b, fabric)
 
@@ -132,10 +139,12 @@ def t_ring_allreduce(p: int, b: int, fabric: Fabric = WSE2) -> float:
     distance = 2.0 * (2 * p - 3)
     depth = 2.0 * (p - 1)
     return (max(contention, bandwidth + distance)
-            + fabric.per_depth_cost * depth)
+            + fabric.per_depth_cost * depth
+            + fabric.t_launch * depth)
 
 
-ALLREDUCE_PATTERNS = ("star", "chain", "tree", "two_phase", "ring")
+ALLREDUCE_PATTERNS = ("star", "chain", "tree", "two_phase", "ring",
+                      "oneshot")
 
 
 # ---------------------------------------------------------------------- #
@@ -150,7 +159,8 @@ def t_ring_reduce_scatter(p: int, b: int, fabric: Fabric = WSE2) -> float:
         return 0.0
     moved = (p - 1) * b / p / fabric.link_bw
     distance = float(2 * p - 3)
-    return moved + distance + fabric.per_depth_cost * (p - 1)
+    return (moved + distance + fabric.per_depth_cost * (p - 1)
+            + fabric.t_launch * (p - 1))
 
 
 def t_ring_allgather(p: int, b: int, fabric: Fabric = WSE2) -> float:
@@ -165,7 +175,8 @@ def t_doubling_allgather(p: int, b: int, fabric: Fabric = WSE2) -> float:
     if p == 1:
         return 0.0
     lg = math.ceil(math.log2(p))
-    return b * (p - 1) / p / fabric.link_bw + fabric.per_depth_cost * lg
+    return (b * (p - 1) / p / fabric.link_bw + fabric.per_depth_cost * lg
+            + fabric.t_launch * lg)
 
 
 def t_doubling_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
@@ -174,14 +185,16 @@ def t_doubling_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
     if p == 1:
         return 0.0
     lg = math.ceil(math.log2(p))
-    return lg * b / fabric.link_bw + fabric.per_depth_cost * lg
+    return (lg * b / fabric.link_bw + fabric.per_depth_cost * lg
+            + fabric.t_launch * lg)
 
 
 def t_chain_broadcast(p: int, b: int, fabric: Fabric = WSE2) -> float:
     """Unpipelined hop-by-hop relay: P-1 serialized B-element sends."""
     if p == 1:
         return 0.0
-    return (p - 1) * (b / fabric.link_bw + fabric.per_depth_cost)
+    return (p - 1) * (b / fabric.link_bw + fabric.per_depth_cost
+                      + fabric.t_launch)
 
 
 REDUCE_SCATTER_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
@@ -216,7 +229,8 @@ def t_ring_all_to_all(p: int, b: int, fabric: Fabric = WSE2) -> float:
     bandwidth = chunk * _ring_hop_sum(p) / bw  # per-link element load
     distance = float(p - 1)                    # pipeline fill across rounds
     return (max(contention, bandwidth + distance)
-            + fabric.per_depth_cost * (p - 1))
+            + fabric.per_depth_cost * (p - 1)
+            + fabric.t_launch * (p - 1))
 
 
 def t_halving_all_to_all(p: int, b: int, fabric: Fabric = WSE2) -> float:
@@ -241,7 +255,125 @@ def t_halving_all_to_all(p: int, b: int, fabric: Fabric = WSE2) -> float:
         rounds += 1
         shift <<= 1
     return (max(sent / bw, link_load / bw + distance)
-            + fabric.per_depth_cost * rounds)
+            + fabric.per_depth_cost * rounds
+            + fabric.t_launch * rounds)
+
+
+# ---------------------------------------------------------------------- #
+# One-shot latency algorithms: the whole collective as a single program
+# launch (lax.psum / lax.all_gather / lax.all_to_all over the -- possibly
+# folded -- axis).  The wire story is a direct exchange with no
+# store-and-forward reuse: the AllReduce blasts each device's full vector
+# to every peer (K-way combine at the receiver), the AllGather/AllToAll
+# unicast each chunk straight to its consumer, so per-link load carries
+# the full shortest-path hop sum.  More bytes than the multi-round
+# patterns at large B -- but depth 1 and one launch, which is the whole
+# point below the crossover the selector computes from these forms.
+# The distance term is P (>= M+N-1 for every 2D folding of P), keeping
+# each form above the Lemma 7.2 / injection lower bounds the planner
+# validates candidates against.
+# ---------------------------------------------------------------------- #
+def t_oneshot_allreduce(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Single-launch all-broadcast + local K-way reduce: every device
+    absorbs (P-1)*B elements, one launch, depth 1."""
+    if p == 1:
+        return 0.0
+    bw = fabric.link_bw
+    contention = b * (p - 1) / bw
+    bandwidth = b * _ring_hop_sum(p) / p / bw
+    distance = float(p)
+    return (max(contention, bandwidth + distance)
+            + fabric.per_depth_cost + fabric.t_launch)
+
+
+def t_oneshot_allgather(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Single-launch direct shard exchange (B = gathered size): each
+    device unicasts its B/P shard to all P-1 peers in one program."""
+    if p == 1:
+        return 0.0
+    bw = fabric.link_bw
+    shard = b / p
+    contention = b * (p - 1) / p / bw
+    bandwidth = shard * _ring_hop_sum(p) / bw
+    distance = float(p)
+    return (max(contention, bandwidth + distance)
+            + fabric.per_depth_cost + fabric.t_launch)
+
+
+def t_oneshot_all_to_all(p: int, b: int, fabric: Fabric = WSE2) -> float:
+    """Single-launch personalized exchange (B = per-device bytes): all
+    P-1 destination chunks in flight at once, depth 1."""
+    if p <= 1:
+        return 0.0
+    bw = fabric.link_bw
+    chunk = b / p
+    contention = b * (p - 1) / p / bw
+    bandwidth = chunk * _ring_hop_sum(p) / bw
+    distance = float(p)
+    return (max(contention, bandwidth + distance)
+            + fabric.per_depth_cost + fabric.t_launch)
+
+
+#: program launches per (op, algorithm) at axis size P -- the L_i column
+#: of the ``calibrate_launch`` least-squares design matrix.
+def launch_count(op: str, algorithm: str, p: int) -> float:
+    if p <= 1:
+        return 0.0
+    lg = math.ceil(math.log2(p))
+    if algorithm == "oneshot":
+        return 1.0
+    if op == "allreduce":
+        if algorithm == "ring":
+            return float(2 * (p - 1))
+        s = min(max(1, round(math.sqrt(p))), p)
+        reduce_rounds = {"star": p - 1, "chain": p - 1, "tree": lg,
+                         "two_phase": (s - 1) + (ceil_div(p, s) - 1),
+                         }.get(algorithm, p - 1)
+        return float(reduce_rounds + lg)     # + doubling broadcast half
+    if op in ("reduce_scatter", "allgather", "all_to_all", "broadcast"):
+        return float({"ring": p - 1, "doubling": lg, "halving": lg,
+                      "chain": p - 1}.get(algorithm, p - 1))
+    return float(p - 1)
+
+
+#: nominal MXU throughput in MACs per model cycle: a v5e axis cycle is
+#: ~11.4 ns (one 512-byte flit over a 45 GB/s link) and the chip peaks
+#: near 1e14 MAC/s, so ~2^20 MACs fit in one cycle.  Only the *ratio*
+#: of compute to wire time enters the fused-overlap decision.
+MXU_MACS_PER_CYCLE = float(1 << 20)
+
+
+def t_matmul(m: int, k: int, n: int,
+             macs_per_cycle: float = MXU_MACS_PER_CYCLE) -> float:
+    """Model cycles for an [m, k] @ [k, n] GEMM at nominal MXU rate."""
+    return float(m) * float(k) * float(n) / macs_per_cycle
+
+
+def t_fused_matmul_rs(p: int, b: int, t_mm: float,
+                      fabric: Fabric = WSE2) -> float:
+    """Overlapped fused matmul + ring reduce-scatter (the PR 6 wavefront
+    closed form with C = P chunks over two disjoint resource classes,
+    MXU vs wire).
+
+    ``b`` is the full [M, N] partial product in elements, ``t_mm`` the
+    cycles of the full local GEMM.  The ring computes one of the P row
+    blocks per step (``t_mm / p`` MXU cycles) while the previous step's
+    accumulator rotates downstream (one B/P-element hop); fill is one
+    GEMM chunk, then P-1 beats of the slower class, then the last hop::
+
+        T_fused = t_mm/P + (P-1) * max(t_mm/P, t_hop) + t_hop
+
+    with ``t_hop = (B/P)/bw + per_depth_cost + t_launch`` -- the same
+    per-hop price ``t_ring_reduce_scatter`` charges P-1 times.  Against
+    the serialized ``t_mm + t_rs`` this wins exactly when a block GEMM
+    outlasts a hop (compute long enough to hide the wire), which is the
+    crossover the engine's pricing exposes."""
+    t_mm = float(t_mm)
+    if p <= 1:
+        return t_mm
+    t_hop = ((b / p) / fabric.link_bw + fabric.per_depth_cost
+             + fabric.t_launch)
+    return t_mm / p + (p - 1) * max(t_mm / p, t_hop) + t_hop
 
 
 ALL_TO_ALL_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
@@ -252,6 +384,7 @@ ALL_TO_ALL_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
 ALLGATHER_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
     "ring": t_ring_allgather,
     "doubling": t_doubling_allgather,
+    "oneshot": t_oneshot_allgather,
 }
 
 BROADCAST_PATTERNS: Dict[str, Callable[[int, int, Fabric], float]] = {
@@ -312,13 +445,14 @@ def t_reduce_bcast_2d(pattern: str, m: int, n: int, b: int,
 
 
 def t_lower_bound_2d(m: int, n: int, b: int, fabric: Fabric = WSE2) -> float:
-    """Lemma 7.2: T >= max(B, B/8 + M + N - 1) + 2*T_R + 1.
+    """Lemma 7.2: T >= max(B, B/8 + M + N - 1) + 2*T_R + 1, plus one
+    program launch (any collective dispatches at least once).
 
     On a heterogeneous grid instantiate with a fabric no slower than any
     axis's (max link_bw, min latency) so the bound stays a bound."""
     bw = fabric.link_bw
     return (max(float(b) / bw, b / 8.0 / bw + m + n - 1)
-            + fabric.per_depth_cost * 1.0)
+            + fabric.per_depth_cost * 1.0 + fabric.t_launch * 1.0)
 
 
 __all__ = [
@@ -329,6 +463,9 @@ __all__ = [
     "t_lower_bound_2d", "t_ring_reduce_scatter", "t_ring_allgather",
     "t_doubling_allgather", "t_doubling_broadcast", "t_chain_broadcast",
     "t_ring_all_to_all", "t_halving_all_to_all",
+    "t_oneshot_allreduce", "t_oneshot_allgather", "t_oneshot_all_to_all",
+    "launch_count", "t_matmul", "t_fused_matmul_rs",
+    "MXU_MACS_PER_CYCLE",
     "REDUCE_PATTERNS", "ALLREDUCE_PATTERNS", "REDUCE_SCATTER_PATTERNS",
     "ALLGATHER_PATTERNS", "BROADCAST_PATTERNS", "ALL_TO_ALL_PATTERNS",
 ]

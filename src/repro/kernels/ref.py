@@ -75,6 +75,23 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
     return out.astype(q.dtype)
 
 
+def fused_matmul_rs_ref(x_parts: jax.Array, w_parts: jax.Array
+                        ) -> jax.Array:
+    """Fused matmul + reduce-scatter oracle.
+
+    ``x_parts``: [P, M, K_loc] per-device activations; ``w_parts``:
+    [P, K_loc, N] per-device weight shards (K sharded over the axis).
+    Returns [P, M/P, N]: slot ``i`` is device ``i``'s row block of the
+    summed product -- ``lax.psum_scatter(x @ w, axis, tiled=True)``
+    semantics.  Accumulation in float32.
+    """
+    p, m, _ = x_parts.shape
+    n = w_parts.shape[-1]
+    full = jnp.einsum("pmk,pkn->mn", x_parts.astype(jnp.float32),
+                      w_parts.astype(jnp.float32))
+    return full.reshape(p, m // p, n).astype(x_parts.dtype)
+
+
 def selective_scan_ref(dt: jax.Array, x: jax.Array, b: jax.Array,
                        c: jax.Array, a: jax.Array, h0: jax.Array):
     """Oracle for the fused Mamba scan: plain sequential recurrence.
@@ -102,4 +119,4 @@ def selective_scan_ref(dt: jax.Array, x: jax.Array, b: jax.Array,
 
 
 __all__ = ["multi_add_ref", "flash_attention_ref", "paged_attention_ref",
-           "selective_scan_ref"]
+           "fused_matmul_rs_ref", "selective_scan_ref"]

@@ -74,7 +74,8 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
         reduced: bool = True, ckpt_dir: str | None = None,
         ckpt_every: int = 50, lr: float = 3e-4, microbatches: int = 1,
         log_every: int = 10, resume: bool = True, dp: bool = False,
-        grad_sync_mode: str = "allreduce", fabric_spec: str | None = None,
+        grad_sync_mode: str = "allreduce", fused: bool = False,
+        fabric_spec: str | None = None,
         moe_ep: str | None = None, num_experts: int | None = None,
         trace: str | None = None, obs_report: bool = False,
         metrics_out: str | None = None):
@@ -97,6 +98,10 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
                                   moe_ep_algorithm=moe_ep)
         print(f"[train] expert-parallel MoE dispatch: "
               f"all_to_all[{moe_ep}]")
+    if fused or cfg.fused_tp:
+        from repro.models.layers import set_fused_tp
+        set_fused_tp(True)
+        print("[train] fused matmul+reduce-scatter executor enabled")
     schedule = "wsd" if arch == "minicpm-2b" else "cosine"
     opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 1),
                           total_steps=steps, schedule=schedule)
@@ -125,7 +130,7 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
         mesh = make_dp_mesh()
         axes = grad_sync_axes_for_mesh(mesh)
         grad_sync = GradSyncConfig(mesh=mesh, axes=axes,
-                                   mode=grad_sync_mode)
+                                   mode=grad_sync_mode, fused=fused)
         n_dp = 1
         for a in axes:
             n_dp *= mesh.shape[a]
@@ -137,7 +142,8 @@ def run(arch: str, steps: int, batch_size: int, seq_len: int,
                   f"by DP world {n_dp}; batch stays replicated (no DP "
                   f"speedup, sync path still exercised)")
         print(f"[train] dp mesh {dict(mesh.shape)} grad-sync axes "
-              f"{axes} mode={grad_sync_mode}")
+              f"{axes} mode={grad_sync_mode}"
+              + (" fused" if fused else ""))
     step_fn = jax.jit(make_train_step(cfg, opt_cfg,
                                       microbatches=microbatches,
                                       grad_sync=grad_sync))
@@ -208,6 +214,11 @@ def main():
                     default="allreduce",
                     help="engine sync shape under --dp: bucketed "
                          "allreduce or the FSDP RS/AG pair")
+    ap.add_argument("--fused", action="store_true",
+                    help="route the grad sync (and TP projections, "
+                         "when a model axis exists) through the "
+                         "engine's fused matmul+reduce-scatter "
+                         "executor (kernels/fused_matmul_rs.py)")
     ap.add_argument("--fabric", default=None, metavar="SPEC",
                     help="heterogeneous fabric topology: "
                          "'pod=slow,data=fast' (presets or link_bw "
@@ -229,7 +240,8 @@ def main():
     run(args.arch, args.steps, args.batch, args.seq, reduced=args.reduced,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
         microbatches=args.microbatches, dp=args.dp,
-        grad_sync_mode=args.grad_sync, fabric_spec=args.fabric,
+        grad_sync_mode=args.grad_sync, fused=args.fused,
+        fabric_spec=args.fabric,
         moe_ep=args.moe_ep, num_experts=args.experts,
         trace=args.trace, obs_report=args.obs_report,
         metrics_out=args.metrics_out)

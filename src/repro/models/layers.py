@@ -343,6 +343,74 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.moveaxis(out, 1, 2)
 
 
+# ---------------------------------------------------------------------- #
+# fused tensor-parallel down-projection (opt-in)
+#
+# The TP down-projection contracts the model-sharded hidden dim, so its
+# natural lowering is a partial-sum + psum.  With fusion enabled the
+# psum is decomposed into reduce-scatter + allgather and the RS rides
+# the engine's fused matmul+reduce-scatter executor
+# (kernels/fused_matmul_rs.py): GEMM row blocks feed the ring as they
+# complete instead of serializing MXU time behind wire time.
+# ---------------------------------------------------------------------- #
+_FUSED_TP = False
+
+
+def set_fused_tp(value: bool) -> None:
+    """Enable/disable the fused TP down-projection (launchers flip this
+    under ``--fused``; a no-op unless the mesh has a model axis > 1 and
+    the shapes tile the ring)."""
+    global _FUSED_TP
+    _FUSED_TP = bool(value)
+
+
+def fused_tp_enabled() -> bool:
+    return _FUSED_TP
+
+
+def _fused_tp_applicable(mesh, h: jax.Array) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pm = sizes.get("model", 1)
+    if pm <= 1:
+        return False
+    b, s, f = h.shape
+    if f % pm:
+        return False
+    n_dp = 1
+    for a in ("pod", "data"):
+        n_dp *= sizes.get(a, 1)
+    if b % n_dp:
+        return False
+    return ((b // n_dp) * s) % pm == 0
+
+
+def _fused_down_proj(h: jax.Array, w_down: jax.Array, mesh) -> jax.Array:
+    """``psum(h @ w_down)`` over 'model' as reduce-scatter + allgather,
+    the RS fused with the GEMM ring."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.collectives.api import get_engine
+
+    eng = get_engine()
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp_spec = (dp if len(dp) > 1 else dp[0]) if dp else None
+    b, s, _ = h.shape
+    d = w_down.shape[-1]
+
+    def body(h_l, w_l):
+        bl = h_l.shape[0]
+        x2 = h_l.reshape(bl * s, h_l.shape[-1])
+        y_s = eng.fused_matmul_reduce_scatter(x2, w_l, "model")
+        y = eng.allgather_inside(y_s, "model")
+        return y.reshape(bl, s, d)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(dp_spec, None, "model"), P("model", None)),
+                   out_specs=P(dp_spec, None, None), check_rep=False)
+    return fn(h, w_down)
+
+
 def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
            w_down: jax.Array) -> jax.Array:
     # hidden is TP-sharded; forces FSDP weight-gather over data instead of
@@ -350,6 +418,10 @@ def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     g = shard_hint(x @ w_gate, "dp", None, "model")
     u = shard_hint(x @ w_up, "dp", None, "model")
     h = jax.nn.silu(g) * u
+    if _FUSED_TP:
+        mesh = _ambient_mesh()
+        if mesh is not None and _fused_tp_applicable(mesh, h):
+            return _fused_down_proj(h, w_down, mesh)
     return shard_hint(h @ w_down, "dp", None, None)
 
 
@@ -359,4 +431,5 @@ def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up: jax.Array,
     return h @ w_down + b_down
 
 
-__all__ = ["rms_norm", "apply_rope", "attention", "swiglu", "gelu_mlp"]
+__all__ = ["rms_norm", "apply_rope", "attention", "swiglu", "gelu_mlp",
+           "set_fused_tp", "fused_tp_enabled"]

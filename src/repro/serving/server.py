@@ -127,8 +127,22 @@ class ContinuousBatchingServer:
         self._sample_gather_fn = None
         self._sample_notopk_gather_fn = None
         self._greedy_gather_fn = None
+        self.assembly_decision = None
+        self.assembly_regime = None
         if mesh is not None:
             eng = self._engine
+            # Decode token assembly gathers one int32 per sequence over
+            # the DP axis -- a few hundred bytes, firmly below the
+            # latency/bandwidth crossover.  Precompute the planner's
+            # decision once so operators can see which side of the
+            # crossover the serving hot path landed on; the engine
+            # stamps the same choice on every span as ``regime=``.
+            n_dp = mesh.shape[dp_axis]
+            dec = eng.select("allgather", batch_size * 4, n_dp,
+                             fabric=eng.topology.for_axis(dp_axis))
+            self.assembly_decision = dec
+            self.assembly_regime = ("latency" if dec.algorithm == "oneshot"
+                                    else "bandwidth")
 
             def _gathered(fn):
                 # per-shard tokens assembled by the engine's cached

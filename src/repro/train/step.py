@@ -48,7 +48,14 @@ class GradSyncConfig:
     is supported: the fp32 master lives as one flat sharded vector
     updated in place.  ``compress`` is an allreduce-mode knob and is
     ignored here; ``algorithm`` picks the plan shape for all three
-    phases ("auto" = planner argmin)."""
+    phases ("auto" = planner argmin).
+
+    ``fused=True`` (fsdp mode) routes the grad reduce-scatter through
+    the engine's ``fused_matmul_reduce_scatter`` executor.  The grad
+    sync site has no local GEMM to fuse (``w=None``), so this is the
+    documented degenerate: the chunk-overlapped reduce-scatter -- the
+    same opt-in flag the tensor-parallel projections use where a real
+    GEMM does feed the ring (``models.layers.set_fused_tp``)."""
 
     mesh: Mesh
     axes: Tuple[str, ...] = ("data",)
@@ -56,6 +63,7 @@ class GradSyncConfig:
     bucket_bytes: int = 4 * 1024 * 1024
     compress: bool = False
     mode: str = "allreduce"        # "allreduce" | "fsdp"
+    fused: bool = False
 
     def __post_init__(self):
         if self.mode not in ("allreduce", "fsdp"):
@@ -164,8 +172,12 @@ def fsdp_sync_apply(opt_cfg: AdamWConfig, params, grads, opt,
     b2c = 1 - opt_cfg.b2 ** count.astype(jnp.float32)
 
     def shard_fn(g, p32, dm, m, v):
-        g_s = engine.reduce_scatter_multi(g, axes,
-                                          algorithm=gs.algorithm)
+        if gs.fused:
+            g_s = engine.fused_matmul_reduce_scatter(
+                g, None, axes, algorithm=gs.algorithm)
+        else:
+            g_s = engine.reduce_scatter_multi(g, axes,
+                                              algorithm=gs.algorithm)
         g_s = g_s / float(n_world)      # mean over the DP world
         sq = engine.allreduce_multi(jnp.sum(jnp.square(g_s)).reshape(1),
                                     axes, algorithm=gs.algorithm)

@@ -133,6 +133,7 @@ def test_selector_matches_argmin_of_model():
                 "chain": pat.t_chain(p, b, TPU_V5E_AXIS)
                 + pat.t_doubling_broadcast(p, b, TPU_V5E_AXIS),
                 "ring": pat.t_ring_allreduce(p, b, TPU_V5E_AXIS),
+                "oneshot": pat.t_oneshot_allreduce(p, b, TPU_V5E_AXIS),
             }
             assert costs[algo] == min(costs.values())
 

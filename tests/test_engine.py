@@ -32,7 +32,7 @@ def test_selection_cache_hit_miss(tmp_path):
     d1 = eng.select("allreduce", 1 << 20, 8)
     assert eng.stats == {"hits": 0, "misses": 1, "dp_runs": 0,
                          "persisted_loads": 0, "plan_hits": 0,
-                         "plan_misses": 0}
+                         "plan_misses": 0, "latency_dispatches": 0}
     d2 = eng.select("allreduce", 1 << 20, 8)
     assert eng.stats["hits"] == 1 and eng.stats["misses"] == 1
     assert d1 == d2

@@ -1,0 +1,237 @@
+"""Latency-regime planning: one-shot candidates, the crossover, launch
+calibration, cache round-trips, and the fused matmul+RS pricing.
+
+Pure model/planner tests -- no devices.  The execution side (oneshot
+dispatch correctness, the fused Pallas kernel vs its oracle) lives in
+``test_fused_multidev.py``.
+"""
+
+import pytest
+
+from repro.collectives.engine import MODEL_VERSION, CollectiveEngine
+from repro.core import patterns as pat
+from repro.core.model import WSE2, parse_fabric_topology
+
+SMALL = (256, 1024, 4096)
+LARGE = (1 << 20, 4 << 20)
+DECODE_OPS = ("allreduce", "allgather", "all_to_all")
+
+
+def _engine(spec=None):
+    if spec:
+        return CollectiveEngine(fabric=parse_fabric_topology(spec),
+                                persist=False)
+    return CollectiveEngine(persist=False)
+
+
+# --------------------------- the crossover ---------------------------- #
+@pytest.mark.parametrize("spec", [None, "pod=slow"])
+@pytest.mark.parametrize("op", DECODE_OPS)
+def test_latency_wins_below_crossover(spec, op):
+    """Decode-sized payloads select the one-phase latency plan on both
+    the uniform and the heterogeneous ``pod=slow`` debug topologies."""
+    eng = _engine(spec)
+    for nbytes in SMALL:
+        plan = eng.plan_multi(op, ("pod", "data"), (2, 4), nbytes)
+        assert plan.shape == "latency", (spec, op, nbytes, plan.shape)
+        assert plan.predicted == min(plan.predictions.values())
+        # one phase, no chunking: the whole point of the regime
+        assert len(plan.steps) == 1
+        assert plan.steps[0].algorithm == "oneshot"
+        assert plan.n_chunks == 1
+
+
+@pytest.mark.parametrize("spec", [None, "pod=slow"])
+@pytest.mark.parametrize("op", DECODE_OPS)
+def test_bandwidth_wins_above_crossover(spec, op):
+    """Training-sized payloads leave the latency plan: the multi-phase
+    bandwidth shapes win once wire time dominates launches."""
+    eng = _engine(spec)
+    for nbytes in LARGE:
+        plan = eng.plan_multi(op, ("pod", "data"), (2, 4), nbytes)
+        assert plan.shape != "latency", (spec, op, nbytes, plan.shape)
+        assert (plan.predictions["latency"]
+                > min(plan.predictions.values())), (spec, op, nbytes)
+
+
+def test_crossover_is_monotone():
+    """latency minus best-bandwidth is increasing in payload size, so
+    the regime decision is a single crossover, not a fringe."""
+    eng = _engine()
+    last = None
+    for nbytes in (256, 1024, 4096, 16384, 65536, 262144, 1 << 20):
+        plan = eng.plan_multi("allgather", ("pod", "data"), (2, 4),
+                              nbytes)
+        others = min(v for k, v in plan.predictions.items()
+                     if k != "latency")
+        gap = plan.predictions["latency"] - others
+        if last is not None:
+            assert gap >= last - 1e-6, nbytes
+        last = gap
+
+
+def test_oneshot_respects_lower_bounds():
+    """The one-shot closed forms keep distance >= the 2D injection
+    bound for every folding, so no latency candidate undercuts the
+    planner's Lemma 7.2 floor (the planner raises if one does)."""
+    for spec in (None, "pod=slow"):
+        eng = _engine(spec)
+        for op in DECODE_OPS:
+            for sizes in ((2, 4), (4, 4), (2, 2, 2)):
+                axes = tuple(f"a{i}" for i in range(len(sizes)))
+                for nbytes in (256, 4096, 1 << 20):
+                    plan = eng.plan_multi(op, axes, sizes, nbytes)
+                    assert (plan.predictions["latency"]
+                            >= plan.lower_bound - 1e-6), (
+                        spec, op, sizes, nbytes)
+
+
+def test_oneshot_is_1d_candidate():
+    """At small B the 1D selector's argmin is the depth-1 one-shot for
+    allreduce and allgather (a2a keeps its paper frontier and reaches
+    the one-shot only through the plan-level latency shape)."""
+    eng = _engine()
+    for op in ("allreduce", "allgather"):
+        d = eng.select(op, 256, 8)
+        assert d.algorithm == "oneshot", (op, d.predictions)
+        assert "oneshot" in d.predictions
+    d = eng.select("all_to_all", 256, 8)
+    assert "oneshot" not in d.predictions
+
+
+def test_single_axis_a2a_has_no_latency_shape():
+    """One effective axis folds to nothing: the latency shape needs a
+    multi-axis topology to beat, so (1, 8) keeps the sequential
+    degenerate plan."""
+    eng = _engine()
+    plan = eng.plan_multi("all_to_all", ("pod", "data"), (1, 8), 1 << 10)
+    assert "latency" not in plan.predictions
+    assert plan.shape == "sequential"
+
+
+# ------------------------- launch calibration ------------------------- #
+def _synthetic_samples(eng, t_true, s_per_cycle=2e-9):
+    fab = eng.topology.for_axis(None)
+    samples = []
+    for nbytes in (256, 4096, 65536, 1 << 20):
+        for op, algos in (("allreduce", ("ring", "oneshot")),
+                          ("allgather", ("ring", "doubling", "oneshot"))):
+            for algo in algos:
+                base = eng.select(op, nbytes, 8,
+                                  fabric=fab).predictions[algo]
+                launches = pat.launch_count(op, algo, 8)
+                samples.append((op, 8, nbytes, algo,
+                                s_per_cycle * (base + t_true * launches)))
+    return samples
+
+
+def test_calibrate_launch_recovers_injected_overhead(tmp_path):
+    eng = CollectiveEngine(cache_path=str(tmp_path / "d.json"))
+    t_true = 300.0
+    fitted = eng.calibrate_launch(_synthetic_samples(eng, t_true))
+    assert fitted == pytest.approx(t_true, rel=1e-6)
+    assert eng.topology.for_axis(None).t_launch == pytest.approx(t_true,
+                                                                 rel=1e-6)
+    # post-calibration predictions carry the per-launch charge exactly
+    d = eng.select("allreduce", 1 << 20, 8)
+    ring_launches = pat.launch_count("allreduce", "ring", 8)
+    uncal = CollectiveEngine(persist=False).select("allreduce", 1 << 20, 8)
+    assert d.predictions["ring"] == pytest.approx(
+        uncal.predictions["ring"] + t_true * ring_launches)
+
+
+def test_calibrate_launch_flips_small_payloads_to_latency(tmp_path):
+    """On a fabric with real launch overhead the one-shot's advantage
+    widens: the multi-phase shapes pay per-round, the latency plan
+    pays once."""
+    eng = CollectiveEngine(cache_path=str(tmp_path / "d.json"))
+    # vs the genuinely multi-phase hierarchical shape ("flat" folds to
+    # the same one-shot at decode sizes and ties at gap 0)
+    before = eng.plan_multi("allreduce", ("pod", "data"), (2, 4), 4096)
+    gap_before = (before.predictions["hierarchical"]
+                  - before.predictions["latency"])
+    eng.calibrate_launch(_synthetic_samples(eng, 300.0))
+    after = eng.plan_multi("allreduce", ("pod", "data"), (2, 4), 4096)
+    gap_after = (after.predictions["hierarchical"]
+                 - after.predictions["latency"])
+    assert after.shape == "latency"
+    assert gap_after > gap_before
+
+
+def test_calibrate_launch_rejects_degenerate_samples(tmp_path):
+    eng = CollectiveEngine(cache_path=str(tmp_path / "d.json"))
+    with pytest.raises(ValueError):
+        # all samples share one launch count: the overhead column is
+        # unidentifiable
+        eng.calibrate_launch([("allreduce", 8, 1 << 20, "ring", 1e-3),
+                              ("allreduce", 8, 1 << 10, "ring", 1e-5)])
+
+
+# --------------------------- cache round-trip ------------------------- #
+def test_latency_decisions_roundtrip_cache(tmp_path):
+    path = str(tmp_path / "decisions.json")
+    eng = CollectiveEngine(cache_path=path)
+    d = eng.select("allgather", 256, 8)
+    plan = eng.plan_multi("allgather", ("pod", "data"), (2, 4), 256)
+    assert d.algorithm == "oneshot" and plan.shape == "latency"
+    eng.flush()
+
+    eng2 = CollectiveEngine(cache_path=path)
+    d2 = eng2.select("allgather", 256, 8)
+    assert eng2.stats["persisted_loads"] >= 1
+    assert d2.algorithm == "oneshot"
+    assert d2.predictions == pytest.approx(d.predictions)
+    plan2 = eng2.plan_multi("allgather", ("pod", "data"), (2, 4), 256)
+    assert plan2.shape == "latency"
+    assert plan2.predictions == pytest.approx(plan.predictions)
+
+
+def test_calibrated_t_launch_splits_cache_namespace(tmp_path):
+    """A calibrated fabric's decisions are keyed with its ``_tl`` tag,
+    so they never collide with the uncalibrated entries -- and the
+    uncalibrated tag is unchanged from pre-latency schemas."""
+    eng = CollectiveEngine(cache_path=str(tmp_path / "d.json"))
+    tag0 = eng._fabric_one_tag(eng.topology.for_axis(None))
+    assert "_tl" not in tag0
+    eng.calibrate_launch(_synthetic_samples(eng, 250.0))
+    tag1 = eng._fabric_one_tag(eng.topology.for_axis(None))
+    assert "_tl250" in tag1
+    assert MODEL_VERSION == 3
+
+
+# ------------------------ fused matmul+RS pricing --------------------- #
+def test_fused_pricing_wins_at_fsdp_shard_sizes():
+    """For >= 1 MiB FFN-shaped shards the modeled overlapped cost is
+    strictly below GEMM-then-RS: the per-block GEMM outlasts a ring
+    hop, so the wire time hides behind the MXU."""
+    eng = _engine()
+    # [512, 4096] @ [4096, 512] over p=8: 1 MiB fp32 output
+    price = eng.price_fused_matmul_rs(512, 4096, 512, 8)
+    assert price["fused"] < price["serial"]
+    assert price["saved"] > 0.0
+    # the fused form never beats the pure wire floor of the RS
+    assert price["fused"] > price["t_rs"] / 8
+
+
+def test_fused_pricing_declines_tiny_shapes():
+    """MQA-decode-sized projections are launch-bound: the ring's extra
+    hops cost more than the overlap saves, and auto keeps the gathered
+    path."""
+    eng = _engine()
+    price = eng.price_fused_matmul_rs(32, 16, 12, 8)
+    assert price["saved"] < 0.0
+
+
+def test_fused_closed_form_structure():
+    """t_fused_matmul_rs = fill + (P-1) steps at the slower resource +
+    drain; equal-resource crossover at t_mm/P == t_hop."""
+    fab = WSE2
+    p, b = 8, 1 << 18
+    hop = (b / p) / fab.link_bw + fab.per_depth_cost + fab.t_launch
+    # wire-bound: tiny GEMM, the ring dominates
+    t = pat.t_fused_matmul_rs(p, b, 1.0, fab)
+    assert t == pytest.approx(1.0 / p + (p - 1) * hop + hop)
+    # MXU-bound: huge GEMM, the hops hide entirely
+    t_mm = hop * p * 100
+    t = pat.t_fused_matmul_rs(p, b, t_mm, fab)
+    assert t == pytest.approx(t_mm / p * p + hop)

@@ -132,7 +132,8 @@ def test_engine_stats_snapshot_counters(tmp_path):
     eng = _engine(tmp_path)
     s0 = eng.stats_snapshot()
     assert s0 == {"hits": 0, "misses": 0, "dp_runs": 0,
-                  "persisted_loads": 0, "plan_hits": 0, "plan_misses": 0}
+                  "persisted_loads": 0, "plan_hits": 0,
+                  "plan_misses": 0, "latency_dispatches": 0}
     eng.select("allreduce", 1 << 20, 8)
     eng.select("allreduce", 1 << 20, 8)
     s_sel = eng.stats_snapshot()

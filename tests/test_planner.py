@@ -57,6 +57,7 @@ def test_planner_argmin_and_predictions(tmp_path):
     plan = eng.plan_multi("allreduce", ("pod", "data"), (2, 16), 1 << 22)
     assert set(plan.predictions) == {"sequential", "hierarchical",
                                      "2d_xy", "2d_snake", "flat",
+                                     "latency",
                                      "sequential_pipelined",
                                      "hierarchical_pipelined"}
     assert plan.predicted == min(plan.predictions.values())
@@ -121,7 +122,7 @@ def test_sharded_op_plans(tmp_path):
     assert set(rs.predictions) == {"cascade", "flat",
                                    "cascade_pipelined"}
     ag = eng.plan_multi("allgather", ("pod", "data"), (2, 4), 1 << 20)
-    assert set(ag.predictions) == {"cascade", "flat",
+    assert set(ag.predictions) == {"cascade", "flat", "latency",
                                    "cascade_pipelined"}
     # cascade reduce-scatter shrinks innermost-first
     forced = eng.plan_multi("reduce_scatter", ("pod", "data"), (2, 4),
@@ -139,7 +140,8 @@ def test_a2a_candidate_set_and_shapes(tmp_path):
     eng = _engine(tmp_path)
     plan = eng.plan_multi("all_to_all", ("pod", "data"), (2, 4), 1 << 20)
     assert set(plan.predictions) == {"hierarchical", "sequential",
-                                     "flat", "hierarchical_pipelined",
+                                     "flat", "latency",
+                                     "hierarchical_pipelined",
                                      "sequential_pipelined"}
     assert plan.predicted == min(plan.predictions.values())
     # hierarchical runs intra-pod (inner) first, then cross-pod
@@ -355,21 +357,27 @@ def test_uniform_topology_prices_bit_for_bit():
     uniform topology must reproduce every modeled price exactly --
     threading per-axis fabrics through the planner cannot perturb the
     single-fabric arithmetic."""
+    # re-captured when the one-shot latency candidates landed: phases
+    # whose argmin flipped to "oneshot" (small per-phase payloads on
+    # the launch-heavy ICI fabric) price lower than the pre-latency
+    # goldens, and every plan now carries a "latency" shape
     golden = {
         ((2, 16), 1 << 22): {
-            "sequential": 29276.0, "flat": 26968.0,
-            "hierarchical": 19620.0, "2d_xy": 61076.0,
-            "2d_snake": 55555.0, "sequential_pipelined": 30548.0,
-            "hierarchical_pipelined": 22756.0},
+            "sequential": 29097.0, "flat": 26968.0,
+            "hierarchical": 19441.0, "2d_xy": 61076.0,
+            "2d_snake": 55555.0, "latency": 254129.0,
+            "sequential_pipelined": 30369.0,
+            "hierarchical_pipelined": 22577.0},
         ((2, 4), 1 << 16): {
-            "sequential": 1704.0, "flat": 1830.0, "hierarchical": 1470.0,
-            "2d_xy": 1781.0, "2d_snake": 2289.0,
-            "sequential_pipelined": 2348.0,
-            "hierarchical_pipelined": 2344.0},
+            "sequential": 866.0, "flat": 1073.0, "hierarchical": 1150.0,
+            "2d_xy": 1781.0, "2d_snake": 2289.0, "latency": 1073.0,
+            "sequential_pipelined": 979.0,
+            "hierarchical_pipelined": 1851.0},
         ((4, 4), 16 << 20): {
             "sequential": 100448.0, "flat": 66808.0,
             "hierarchical": 63402.0, "2d_xy": 198384.0,
-            "2d_snake": 167218.0, "sequential_pipelined": 64944.0,
+            "2d_snake": 167218.0, "latency": 491697.0,
+            "sequential_pipelined": 64944.0,
             "hierarchical_pipelined": 56856.0},
     }
     for wrap in (TPU_V5E_AXIS, FabricTopology.uniform(TPU_V5E_AXIS)):
@@ -386,12 +394,12 @@ def test_uniform_topology_prices_bit_for_bit():
         assert rs.lower_bound == 945.0
         assert eng.select("allreduce", 1 << 20, 8).predictions == {
             "chain": 9969.0, "tree": 13350.0, "two_phase": 11479.0,
-            "ring": 6088.0}
+            "ring": 6088.0, "oneshot": 14513.0}
     wse = CollectiveEngine(fabric=WSE2, persist=False)
     pw = wse.plan_multi("allreduce", ("y", "x"), (4, 4), 4096 * 512)
     assert pw.predictions == {
         "sequential": 12368.0, "flat": 7888.0, "hierarchical": 7750.0,
-        "2d_xy": 12335.0, "2d_snake": 8293.0,
+        "2d_xy": 12335.0, "2d_snake": 8293.0, "latency": 61445.0,
         "sequential_pipelined": 7272.0,
         "hierarchical_pipelined": 6616.0}
     assert pw.lower_bound == 4101.0

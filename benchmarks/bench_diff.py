@@ -39,6 +39,11 @@ GATED = {
     "prefill_chunks": "higher_worse",
     "preemptions": "higher_worse",
     "tokens_out": "lower_worse",
+    # serve: prefix-cache effectiveness (deterministic host-side
+    # bookkeeping for a fixed trace)
+    "prefill_tokens_computed": "higher_worse",
+    "cached_token_fraction": "lower_worse",
+    "prefix_evictions": "higher_worse",
     # decode: latency-regime selection + model prices (declared
     # constants, so deterministic) and post-calibration drift
     "latency_selected": "lower_worse",

@@ -1,10 +1,19 @@
-"""Serving benchmark: continuous batching on the reduced config.
+"""Serving benchmark: continuous batching under a multi-tenant trace.
 
-Drives the paged-cache server with a mixed-length request sweep and
-emits ``BENCH_serve.json`` (tok/s, TTFT p50/p99, scheduler/KV counters)
-so the perf trajectory has a serving datapoint alongside the collective
-microbenchmarks.  CPU-scale shapes; the numbers track *relative*
+Drives the paged-cache server with a **Zipf-skewed multi-tenant trace**
+-- every request opens with one of a small set of shared system prompts
+(popularity ~ 1/rank^a, the skewed mix real traffic shows) followed by
+a short unique user suffix -- and runs it twice, prefix cache on and
+off, on identical token streams.  Emits ``BENCH_serve.json`` with the
+scheduler / prefix-cache counters of both runs (deterministic for a
+fixed seed: gated by ``bench_gate``) plus tok/s and TTFT percentiles
+(informational).  CPU-scale shapes; the numbers track *relative*
 regressions of the serving path, not hardware throughput.
+
+The headline contract asserted here: with >= 70% of request tokens in
+shared prefixes, the cache cuts ``prefill_tokens_computed`` by >= 2x
+and TTFT p50 strictly drops, while greedy token streams stay bitwise
+identical.
 """
 
 from __future__ import annotations
@@ -19,62 +28,60 @@ import numpy as np
 from benchmarks.common import emit
 
 
-def run(arch: str = "minicpm-2b", batch: int = 4, requests: int = 12,
-        prompt_len: int = 24, new_tokens: int = 12,
-        block_size: int = 16, prefill_chunk: int = 16, seed: int = 0):
+def make_trace(rng, requests: int, vocab: int, *, n_prompts: int = 3,
+               zipf_a: float = 1.2, sys_len: int = 48, user_len: int = 12,
+               new_tokens: int = 12):
+    """Zipf-skewed multi-tenant request mix over shared system prompts.
+
+    Returns (list of (rid, prompt, max_new), shared_token_fraction).
+    """
+    sys_prompts = [rng.integers(0, vocab, sys_len).astype(np.int32)
+                   for _ in range(n_prompts)]
+    weights = 1.0 / np.arange(1, n_prompts + 1) ** zipf_a
+    weights /= weights.sum()
+    reqs, shared_tokens, total_tokens = [], 0, 0
+    for rid in range(requests):
+        tenant = rng.choice(n_prompts, p=weights)
+        suffix = rng.integers(0, vocab, user_len).astype(np.int32)
+        prompt = np.concatenate([sys_prompts[tenant], suffix])
+        # mixed output lengths exercise per-step retire/admit
+        n_new = new_tokens if rid % 3 else max(2, new_tokens // 4)
+        reqs.append((rid, prompt, n_new))
+        shared_tokens += sys_len
+        total_tokens += len(prompt)
+    return reqs, shared_tokens / total_tokens
+
+
+def _serve(cfg, params, trace, *, prefix_cache: bool, batch: int,
+           max_len: int, block_size: int, prefill_chunk: int, seed: int,
+           num_blocks):
     import jax
-    from repro.configs import get_config
-    from repro.models import init_params
     from repro.serving import ContinuousBatchingServer, Request
     from repro.serving.telemetry import Telemetry
 
-    cfg = get_config(arch).reduced()
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    max_len = prompt_len + new_tokens + block_size
     server = ContinuousBatchingServer(
         cfg, params, batch, max_len=max_len, seed=seed,
-        block_size=block_size, prefill_chunk=prefill_chunk)
-    rng = np.random.default_rng(seed)
-
-    # warm the jit caches so TTFT measures scheduling, not compilation
-    server.submit(Request(rid=-1,
-                          prompt=rng.integers(0, cfg.vocab_size,
-                                              prompt_len).astype(np.int32),
-                          max_new_tokens=2))
-    server.run()
-    server.telemetry = Telemetry()      # drop compile-time TTFT samples
+        block_size=block_size, prefill_chunk=prefill_chunk,
+        num_blocks=num_blocks, prefix_cache=prefix_cache)
+    # warm every jit path TTFT would otherwise pay for: prefill, decode,
+    # and (same full-block prompt twice) the full-hit copy-on-write copy
+    rng = np.random.default_rng(seed + 1)
+    warm = rng.integers(0, cfg.vocab_size, 2 * block_size).astype(np.int32)
+    for wid in (-1, -2):
+        server.submit(Request(rid=wid, prompt=warm, max_new_tokens=2))
+        server.run()
+    server.telemetry = Telemetry()      # drop compile-time samples
+    del jax
 
     t0 = time.time()
-    for rid in range(requests):
-        # mixed lengths exercise per-step retire/admit
-        n_new = new_tokens if rid % 3 else max(2, new_tokens // 4)
-        server.submit(Request(
-            rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                prompt_len).astype(np.int32),
-            max_new_tokens=n_new))
+    for rid, prompt, n_new in trace:
+        server.submit(Request(rid=rid, prompt=prompt.copy(),
+                              max_new_tokens=n_new))
     results = server.run()
     wall = time.time() - t0
     snap = server.snapshot()
     tokens = sum(len(v) for k, v in results.items() if k >= 0)
-
-    # registry export rides along under "metrics": same numbers, the
-    # unified schema (repro.obs.registry) -- bench_gate validates it,
-    # and the gated top-level counters above stay untouched
-    from repro.collectives.api import get_engine
-    from repro.obs.registry import MetricsRegistry, export_engine_stats
-    from repro.serving.telemetry import export_to_registry
-    reg = MetricsRegistry()
-    export_to_registry(snap, reg, prefix="serve")
-    export_engine_stats(get_engine(), reg)
-    return {
-        "metrics": reg.export_json(),
-        "arch": arch,
-        "batch": batch,
-        "requests": requests,
-        "prompt_len": prompt_len,
-        "new_tokens": new_tokens,
-        "block_size": block_size,
+    counters = {
         "tokens_out": tokens,
         "wall_s": wall,
         "tok_per_s": tokens / wall,
@@ -84,7 +91,96 @@ def run(arch: str = "minicpm-2b", batch: int = 4, requests: int = 12,
         "prefill_chunks": snap.prefill_chunks,
         "preemptions": snap.preemptions,
         "kv_peak_occupancy": snap.kv_peak_occupancy,
+        "prefill_tokens_computed": snap.prefill_tokens_computed,
+        "cached_prefix_tokens": snap.cached_prefix_tokens,
+        "cached_token_fraction": snap.cached_token_fraction,
+        "prefix_evictions": snap.prefix_evictions,
     }
+    return results, counters, server, snap
+
+
+def run(arch: str = "minicpm-2b", batch: int = 4, requests: int = 24,
+        sys_len: int = 48, user_len: int = 12, new_tokens: int = 12,
+        block_size: int = 16, prefill_chunk: int = 16, seed: int = 0):
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_len = sys_len + user_len + new_tokens + block_size
+    # pool tight enough that refcount-0 cached blocks face real
+    # pressure (the eviction LRU is exercised), roomy enough that no
+    # admission deadlocks: ~2.5 requests' worth of blocks
+    blocks_per_seq = -(-max_len // block_size)
+    num_blocks = int(2.5 * blocks_per_seq) + 1
+    trace, shared_frac = make_trace(
+        np.random.default_rng(seed), requests, cfg.vocab_size,
+        sys_len=sys_len, user_len=user_len, new_tokens=new_tokens)
+    kw = dict(batch=batch, max_len=max_len, block_size=block_size,
+              prefill_chunk=prefill_chunk, seed=seed,
+              num_blocks=num_blocks)
+
+    res_off, off, _, _ = _serve(cfg, params, trace, prefix_cache=False,
+                                **kw)
+    res_on, on, server, snap = _serve(cfg, params, trace,
+                                      prefix_cache=True, **kw)
+    assert res_on == res_off, \
+        "prefix cache changed greedy token streams (replay-exactness " \
+        "contract violated)"
+
+    # registry export rides along under "metrics": same numbers, the
+    # unified schema (repro.obs.registry) -- bench_gate validates it,
+    # and the gated top-level counters above stay untouched
+    from repro.collectives.api import get_engine
+    from repro.obs.registry import (MetricsRegistry, export_engine_stats,
+                                    export_prefix_cache_stats)
+    from repro.serving.telemetry import export_to_registry
+    reg = MetricsRegistry()
+    export_to_registry(snap, reg, prefix="serve")
+    export_prefix_cache_stats(server, reg)
+    export_engine_stats(get_engine(), reg)
+    return {
+        "metrics": reg.export_json(),
+        "arch": arch,
+        "batch": batch,
+        "requests": requests,
+        "sys_len": sys_len,
+        "user_len": user_len,
+        "new_tokens": new_tokens,
+        "block_size": block_size,
+        "shared_token_fraction": shared_frac,
+        # headline counters from the cache-on run (the default serving
+        # config) gate at top level; both runs gate in full below
+        **{k: on[k] for k in ("tokens_out", "wall_s", "tok_per_s",
+                              "ttft_p50_ms", "ttft_p99_ms",
+                              "decode_steps", "prefill_chunks",
+                              "preemptions", "kv_peak_occupancy",
+                              "prefill_tokens_computed",
+                              "cached_token_fraction",
+                              "prefix_evictions")},
+        "prefix_on": on,
+        "prefix_off": off,
+        "prefill_compute_speedup": (off["prefill_tokens_computed"]
+                                    / max(on["prefill_tokens_computed"], 1)),
+    }
+
+
+def check(res) -> None:
+    """The acceptance contract for the shared-prompt trace."""
+    on, off = res["prefix_on"], res["prefix_off"]
+    assert res["shared_token_fraction"] >= 0.70, res["shared_token_fraction"]
+    assert on["prefill_tokens_computed"] * 2 <= \
+        off["prefill_tokens_computed"], (
+        f"prefix cache saved < 2x prefill compute: "
+        f"{on['prefill_tokens_computed']} on vs "
+        f"{off['prefill_tokens_computed']} off")
+    assert on["cached_token_fraction"] > 0.5, on["cached_token_fraction"]
+    assert on["ttft_p50_ms"] < off["ttft_p50_ms"], (
+        f"TTFT p50 did not improve: {on['ttft_p50_ms']:.2f}ms on vs "
+        f"{off['ttft_p50_ms']:.2f}ms off")
+    assert off["cached_token_fraction"] == 0.0
+    assert off["prefix_evictions"] == 0
 
 
 def main(out_path: str = "BENCH_serve.json"):
@@ -97,8 +193,14 @@ def main(out_path: str = "BENCH_serve.json"):
     emit("serve/ttft_p99", res["ttft_p99_ms"] * 1e3,
          f"{res['ttft_p99_ms']:.1f}ms")
     emit("serve/decode_steps", 0.0, str(res["decode_steps"]))
+    emit("serve/cached_token_fraction", 0.0,
+         f"{res['cached_token_fraction']:.2f}")
+    emit("serve/prefill_compute_speedup", 0.0,
+         f"{res['prefill_compute_speedup']:.2f}x")
+    emit("serve/prefix_evictions", 0.0, str(res["prefix_evictions"]))
     print(f"# wrote {os.path.abspath(out_path)}")
     assert res["tokens_out"] > 0 and res["tok_per_s"] > 0
+    check(res)
 
 
 if __name__ == "__main__":

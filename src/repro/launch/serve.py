@@ -42,6 +42,15 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="content-addressed CoW sharing of prompt-prefix "
+                         "KV blocks across requests (--no-prefix-cache "
+                         "recomputes every prompt)")
+    ap.add_argument("--shared-prompts", type=int, default=0, metavar="K",
+                    help="draw each request's prompt prefix from K shared "
+                         "system prompts (0 = fully distinct prompts); "
+                         "exercises the prefix cache")
     ap.add_argument("--dp", action="store_true",
                     help="stripe the slot rows over all local devices "
                          "and route token sync through the "
@@ -72,17 +81,28 @@ def main():
     server = BatchedServer(cfg, params, batch, max_len=max_len, mesh=mesh,
                            block_size=args.block_size,
                            prefill_chunk=args.prefill_chunk,
-                           top_k=args.top_k)
+                           top_k=args.top_k,
+                           prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
+    shared = [rng.integers(0, cfg.vocab_size,
+                           size=max(args.prompt_len - 4, 1)).astype(np.int32)
+              for _ in range(args.shared_prompts)]
     t0 = time.time()
     for rid in range(args.requests):
         soft = None
         if cfg.frontend == "vision":
             soft = vision_patches(jax.random.PRNGKey(rid), cfg, 1)
+        if shared:
+            # shared system prompt + short per-request suffix
+            prompt = np.concatenate(
+                [shared[rid % len(shared)],
+                 rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)])
+        else:
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=args.prompt_len).astype(np.int32)
         server.submit(Request(
             rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                size=args.prompt_len).astype(np.int32),
+            prompt=prompt,
             max_new_tokens=args.new_tokens,
             sampling=SamplingParams(temperature=args.temperature),
             soft_emb=soft))
@@ -99,6 +119,13 @@ def main():
           f"{snap.decode_steps} | prefill chunks {snap.prefill_chunks} | "
           f"preemptions {snap.preemptions} | peak kv occupancy "
           f"{snap.kv_peak_occupancy:.2f}")
+    print(f"[serve] prefix cache: "
+          f"{'on' if args.prefix_cache else 'off'} | prefill tokens "
+          f"computed {snap.prefill_tokens_computed} | cached "
+          f"{snap.cached_prefix_tokens} "
+          f"({snap.cached_token_fraction:.0%}) | evictions "
+          f"{snap.prefix_evictions} | kv blocks live "
+          f"{snap.kv_blocks_live} / evictable {snap.kv_blocks_evictable}")
     for rid in sorted(results)[:3]:
         print(f"  req {rid}: {results[rid][:8]}...")
     if mesh is not None:

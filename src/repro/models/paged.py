@@ -63,6 +63,20 @@ def init_pages(cfg: ArchConfig, num_blocks: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def copy_blocks(pages: Dict[str, jax.Array], src: jax.Array,
+                dst: jax.Array) -> Dict[str, jax.Array]:
+    """Copy whole physical blocks ``src[i] -> dst[i]`` in every layer
+    of the pool (copy-on-write for shared prefix blocks: the scheduler
+    re-points a request's table at a private copy before the request
+    writes into a block other tables still read).
+
+    ``src``/``dst``: [n] int32 pool indices; destinations must be
+    distinct (they are freshly allocated), sources may repeat.
+    """
+    return {name: arr.at[:, dst].set(arr[:, src])
+            for name, arr in pages.items()}
+
+
 def _write_pages(pages_l: jax.Array, new: jax.Array,
                  block_tables: jax.Array, ctx_lens: jax.Array,
                  valid: jax.Array) -> jax.Array:
@@ -206,4 +220,4 @@ def decode_step_paged(params: Params, cfg: ArchConfig,
 
 
 __all__ = ["PAGED_FAMILIES", "supports_paged", "init_pages",
-           "forward_paged", "decode_step_paged"]
+           "copy_blocks", "forward_paged", "decode_step_paged"]

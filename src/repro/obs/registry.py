@@ -317,5 +317,40 @@ def export_engine_stats(engine, registry: Optional[MetricsRegistry] = None
     return reg
 
 
+def export_prefix_cache_stats(server,
+                              registry: Optional[MetricsRegistry] = None
+                              ) -> MetricsRegistry:
+    """Mirror a serving ``ContinuousBatchingServer``'s prefix-cache and
+    block-pool state into the registry: the live / evictable occupancy
+    split (cache pressure vs true load) plus the cache's hit / insert /
+    eviction counters.  No-cache servers export the pool gauges only."""
+    reg = registry if registry is not None else REGISTRY
+    alloc = server.allocator
+
+    def g(name: str, value: float, help_: str) -> None:
+        reg.gauge(name, help=help_).set(float(value))
+
+    g("kv_pool_blocks_live", alloc.num_used,
+      "KV blocks referenced by live requests (true load)")
+    g("kv_pool_blocks_evictable", alloc.num_evictable,
+      "refcount-0 cached KV blocks resident until pool pressure")
+    g("kv_pool_blocks_free", alloc.num_free,
+      "KV blocks holding no retained content")
+    g("kv_pool_evictions", alloc.evictions,
+      "cached KV blocks reclaimed under pool pressure")
+    cache = getattr(server, "prefix_cache", None)
+    if cache is not None:
+        g("prefix_cache_entries", len(cache),
+          "content keys resident in the prefix cache")
+        g("prefix_cache_block_hits", cache.hits,
+          "blocks served from the prefix cache")
+        g("prefix_cache_block_misses", cache.misses,
+          "chain lookups that ended a prefix match")
+        g("prefix_cache_inserts", cache.inserts,
+          "blocks registered in the prefix cache")
+    return reg
+
+
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
-           "EXPORT_SCHEMA", "validate_export", "export_engine_stats"]
+           "EXPORT_SCHEMA", "validate_export", "export_engine_stats",
+           "export_prefix_cache_stats"]

@@ -2,15 +2,21 @@
 
 Components (see README "Serving"):
 
-* ``blocks``    -- fixed-size KV block allocator + per-request tables
-* ``sampling``  -- greedy / temperature / top-k token sampling
-* ``scheduler`` -- per-step admit/retire, chunked prefill, preemption
-* ``server``    -- jitted paged-model execution; DP token assembly
-                   through the CollectiveEngine
-* ``telemetry`` -- TTFT / tok/s / queue depth / KV occupancy snapshots
+* ``blocks``       -- refcounted KV block allocator (evictable cached
+                      tier) + per-request tables
+* ``prefix_cache`` -- content-addressed (hash-chained) block sharing
+                      across requests with a common prompt prefix
+* ``sampling``     -- greedy / temperature / top-k token sampling
+* ``scheduler``    -- per-step admit/retire, chunked prefill,
+                      preemption, prefix matching + copy-on-write
+* ``server``       -- jitted paged-model execution; DP token assembly
+                      through the CollectiveEngine
+* ``telemetry``    -- TTFT / tok/s / queue depth / KV occupancy
+                      (live vs evictable) / cached-token snapshots
 """
 
 from repro.serving.blocks import BlockAllocator, BlockTable
+from repro.serving.prefix_cache import PrefixCache, chain_keys
 from repro.serving.sampling import SamplingParams, sample_tokens
 from repro.serving.scheduler import PrefillChunk, Request, Scheduler
 from repro.serving.server import ContinuousBatchingServer
@@ -18,6 +24,7 @@ from repro.serving.telemetry import Telemetry, TelemetrySnapshot
 
 __all__ = [
     "BlockAllocator", "BlockTable", "ContinuousBatchingServer",
-    "PrefillChunk", "Request", "SamplingParams", "Scheduler",
-    "Telemetry", "TelemetrySnapshot", "sample_tokens",
+    "PrefillChunk", "PrefixCache", "Request", "SamplingParams",
+    "Scheduler", "Telemetry", "TelemetrySnapshot", "chain_keys",
+    "sample_tokens",
 ]

@@ -33,9 +33,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.collectives.api import get_engine
-from repro.models.paged import (decode_step_paged, forward_paged,
-                                init_pages, supports_paged)
+from repro.models.paged import (copy_blocks, decode_step_paged,
+                                forward_paged, init_pages, supports_paged)
 from repro.serving.blocks import BlockAllocator
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import (PrefillChunk, Request, Scheduler,
                                      RUNNING)
@@ -59,7 +60,8 @@ class ContinuousBatchingServer:
                  dp_axis: str = "data", engine=None, *,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 32, prefill_per_step: int = 1,
-                 top_k: int = 0, use_kernel: Optional[bool] = None):
+                 top_k: int = 0, use_kernel: Optional[bool] = None,
+                 prefix_cache: bool = True):
         if not supports_paged(cfg):
             raise NotImplementedError(
                 f"serving supports dense/moe decoder families, not "
@@ -73,9 +75,12 @@ class ContinuousBatchingServer:
         if num_blocks is None:
             num_blocks = batch_size * self.max_blocks_per_seq + 1
         self.allocator = BlockAllocator(num_blocks, block_size)
+        self.prefix_cache = (PrefixCache(self.allocator) if prefix_cache
+                             else None)
         self.scheduler = Scheduler(batch_size, self.allocator,
                                    self.max_blocks_per_seq, prefill_chunk,
-                                   prefill_per_step)
+                                   prefill_per_step,
+                                   prefix_cache=self.prefix_cache)
         self.telemetry = Telemetry()
         self.top_k = top_k          # default for requests with top_k=0
         self.key = jax.random.PRNGKey(seed)
@@ -112,6 +117,10 @@ class ContinuousBatchingServer:
         # updates the cache in place instead of copying the whole pool
         donate = (1,) if jax.default_backend() != "cpu" else ()
         self._prefill_fn = jax.jit(_prefill, donate_argnums=donate)
+        # copy-on-write pool copies (whole blocks src -> dst); donated
+        # like the other pool-threading programs
+        self._copy_fn = jax.jit(copy_blocks,
+                                donate_argnums=(0,) if donate else ())
         self._decode_fn = jax.jit(
             lambda p, pg, t, b, c: decode_step_paged(
                 p, cfg, pg, {"tokens": t}, b, c, use_kernel=use_kernel),
@@ -176,7 +185,7 @@ class ContinuousBatchingServer:
             queue_depth=len(self.scheduler.queue),
             active=len(self.scheduler.active()),
             allocator=self.allocator,
-            context_lens=self.scheduler.context_lens())
+            block_usage=self.scheduler.block_usage())
 
     # ------------------------------------------------------------------ #
     def _sample_rows(self, logits: jax.Array, reqs: List[Request],
@@ -236,6 +245,8 @@ class ContinuousBatchingServer:
                 self.params, self.pages, tokens, bt, ctx, new_len)
         req.prefilled += n
         req.ctx_len += n
+        self.telemetry.record_prefill_tokens(n)
+        self.scheduler.note_prefilled(req)
         if req.prefilled == len(replay):
             # prompt fully cached: the chunk's last valid position
             # yields this request's next token (its first, unless it
@@ -280,7 +291,17 @@ class ContinuousBatchingServer:
         while self.scheduler.has_work():
             for req in self.scheduler.retire_finished():
                 results[req.rid] = req.out
-            self.scheduler.admit(self._step)
+            for req in self.scheduler.admit(self._step):
+                if req.cached_prefix_tokens:
+                    self.telemetry.record_cached_prefix(
+                        req.cached_prefix_tokens)
+            cows = self.scheduler.drain_cow_copies()
+            if cows:
+                # private replacements for shared blocks about to be
+                # written; must land before this step's prefill chunks
+                src = jnp.asarray([s for s, _ in cows], jnp.int32)
+                dst = jnp.asarray([d for _, d in cows], jnp.int32)
+                self.pages = self._copy_fn(self.pages, src, dst)
             if not self.scheduler.active():
                 if self.scheduler.queue:
                     raise RuntimeError(

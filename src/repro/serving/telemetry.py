@@ -36,6 +36,15 @@ class TelemetrySnapshot:
     kv_peak_occupancy: float
     kv_internal_frag_slots: int
     ttft_samples: int = 0       # how many TTFTs back the percentiles
+    # -- prefix cache ------------------------------------------------- #
+    # live = refcount >= 1 (true load); evictable = refcount-0 cached
+    # blocks kept resident (cache pressure, reclaimable on demand)
+    kv_blocks_live: int = 0
+    kv_blocks_evictable: int = 0
+    prefill_tokens_computed: int = 0
+    cached_prefix_tokens: int = 0
+    cached_token_fraction: float = 0.0
+    prefix_evictions: int = 0
 
 
 class Telemetry:
@@ -51,6 +60,8 @@ class Telemetry:
         self.finished = 0
         self.preemptions = 0
         self.tokens_out = 0
+        self.prefill_tokens_computed = 0
+        self.cached_prefix_tokens = 0
         self.peak_kv_occupancy = 0.0
         self.ttft_s: List[float] = []
 
@@ -62,6 +73,14 @@ class Telemetry:
 
     def record_tokens(self, n: int) -> None:
         self.tokens_out += n
+
+    def record_prefill_tokens(self, n: int) -> None:
+        """Prompt tokens actually computed by a prefill chunk."""
+        self.prefill_tokens_computed += n
+
+    def record_cached_prefix(self, n: int) -> None:
+        """Prompt tokens served from the prefix cache at admission."""
+        self.cached_prefix_tokens += n
 
     def record_finish(self) -> None:
         self.finished += 1
@@ -80,9 +99,11 @@ class Telemetry:
         return self._clock()
 
     def snapshot(self, *, queue_depth: int, active: int, allocator,
-                 context_lens: List[int]) -> TelemetrySnapshot:
+                 block_usage: List) -> TelemetrySnapshot:
         elapsed = max(self._clock() - self.t0, 1e-9)
         ttft = np.asarray(self.ttft_s, np.float64)
+        prefill_total = self.prefill_tokens_computed + \
+            self.cached_prefix_tokens
         return TelemetrySnapshot(
             elapsed_s=elapsed,
             steps=self.steps,
@@ -106,7 +127,14 @@ class Telemetry:
             kv_peak_occupancy=max(self.peak_kv_occupancy,
                                   allocator.occupancy),
             kv_internal_frag_slots=allocator.internal_fragmentation(
-                context_lens),
+                block_usage),
+            kv_blocks_live=allocator.num_used,
+            kv_blocks_evictable=allocator.num_evictable,
+            prefill_tokens_computed=self.prefill_tokens_computed,
+            cached_prefix_tokens=self.cached_prefix_tokens,
+            cached_token_fraction=(self.cached_prefix_tokens /
+                                   prefill_total if prefill_total else 0.0),
+            prefix_evictions=allocator.evictions,
         )
 
 
@@ -161,6 +189,18 @@ def export_to_registry(snap: TelemetrySnapshot, registry=None,
       "peak KV pool occupancy")
     g("kv_internal_frag_slots", snap.kv_internal_frag_slots,
       "slots lost to block-internal fragmentation")
+    g("kv_blocks_live", snap.kv_blocks_live,
+      "KV blocks referenced by live requests (true load)")
+    g("kv_blocks_evictable", snap.kv_blocks_evictable,
+      "refcount-0 cached KV blocks resident until pool pressure")
+    g("prefill_tokens_computed", snap.prefill_tokens_computed,
+      "prompt tokens actually computed in prefill")
+    g("cached_prefix_tokens", snap.cached_prefix_tokens,
+      "prompt tokens served from the prefix cache")
+    g("cached_token_fraction", snap.cached_token_fraction,
+      "cached / (cached + computed) prefill tokens")
+    g("prefix_evictions", snap.prefix_evictions,
+      "cached blocks reclaimed under pool pressure")
     return reg
 
 

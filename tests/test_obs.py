@@ -382,10 +382,12 @@ def test_monitor_observe_spans_filters():
 class _StubAllocator:
     capacity = 10
     num_used = 3
+    num_evictable = 0
     occupancy = 0.3
+    evictions = 0
 
     @staticmethod
-    def internal_fragmentation(context_lens):
+    def internal_fragmentation(block_usage):
         return 0
 
 
@@ -394,7 +396,7 @@ def _snap_with_ttfts(n):
     for _ in range(n):
         tel.record_first_token(0.0)
     return tel.snapshot(queue_depth=0, active=0,
-                        allocator=_StubAllocator, context_lens=[])
+                        allocator=_StubAllocator, block_usage=[])
 
 
 def test_ttft_samples_and_low_confidence():

@@ -1,0 +1,517 @@
+"""Content-addressed prefix cache: hash-chain keys, refcounted
+allocator with the evictable tier, scheduler-level sharing invariants
+(host-side simulated pool vs a no-sharing oracle), and server-level
+bitwise-identity of greedy streams with the cache on vs off.
+
+Model-level paged-cache numerics live in tests/test_paged_attention.py;
+the non-cache serving paths in tests/test_serving.py.
+"""
+
+from collections import Counter, deque
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import init_params
+from repro.serving import (BlockAllocator, ContinuousBatchingServer,
+                           PrefixCache, Request, Scheduler, chain_keys)
+from repro.serving.blocks import RESERVED_BLOCKS
+from repro.serving.scheduler import RUNNING
+
+VOCAB = 64
+TINY = ArchConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=VOCAB,
+                  dtype="float32")
+
+
+# ----------------------------- chain keys ----------------------------- #
+def test_chain_keys_basic():
+    toks = np.arange(10, dtype=np.int32)
+    keys = chain_keys(toks, 4)
+    assert len(keys) == 2, "only full blocks get keys"
+    assert len(set(keys)) == 2
+    assert chain_keys(toks[:3], 4) == []
+    assert chain_keys([], 4) == []
+    # deterministic across calls and input container types
+    assert chain_keys(list(map(int, toks)), 4) == keys
+
+
+def test_chain_keys_shared_prefix_shares_keys():
+    a = np.arange(12, dtype=np.int32)
+    b = np.concatenate([a[:8], a[8:] + 1])
+    ka, kb = chain_keys(a, 4), chain_keys(b, 4)
+    assert ka[:2] == kb[:2], "identical prefix -> identical keys"
+    assert ka[2] != kb[2]
+
+
+def test_chain_keys_commit_to_entire_prefix():
+    # same tokens in block 1, different block 0: the chain must give
+    # block 1 different keys (a key addresses the whole prefix)
+    a = np.arange(8, dtype=np.int32)
+    b = a.copy()
+    b[0] += 1
+    ka, kb = chain_keys(a, 4), chain_keys(b, 4)
+    assert ka[0] != kb[0] and ka[1] != kb[1]
+    # block size is part of the addressing (different chunking of the
+    # same stream must not collide)
+    assert chain_keys(a, 4)[-1] != chain_keys(a, 8)[-1]
+
+
+# ----------------------- allocator refcounting ------------------------ #
+def test_allocator_refcount_lifecycle():
+    a = BlockAllocator(num_blocks=6, block_size=4)
+    blk = a.alloc(1)[0]
+    assert a.refcount(blk) == 1
+    a.ref(blk)
+    assert a.refcount(blk) == 2
+    a.decref(blk)
+    assert a.refcount(blk) == 1 and a.num_used == 1
+    a.decref(blk)            # uncached: straight back to the free list
+    assert a.refcount(blk) == 0
+    assert (a.num_used, a.num_evictable, a.num_free) == (0, 0, 5)
+    with pytest.raises(ValueError):
+        a.decref(blk)        # double free
+    with pytest.raises(ValueError):
+        a.ref(99)            # foreign block
+
+
+def test_allocator_evictable_park_revive_and_lru_order():
+    a = BlockAllocator(num_blocks=6, block_size=4)   # capacity 5
+    b0, b1, b2 = a.alloc(3)
+    a.register_cached(b0, b"k0")
+    a.register_cached(b1, b"k1")
+    a.decref(b0)
+    a.decref(b1)
+    a.decref(b2)
+    # cached blocks park evictable (content retained), plain one frees
+    assert (a.num_used, a.num_evictable, a.num_free) == (0, 2, 3)
+    assert a.num_available == 5
+    # revive keeps the content claim and the cached flag
+    a.ref(b0)
+    assert a.refcount(b0) == 1 and a.num_evictable == 1
+    a.decref(b0)             # re-parks at the MRU end: LRU order b1, b0
+    evicted = []
+    a.evict_hook = lambda blk, key: evicted.append((blk, key))
+    got = a.alloc(5)         # 3 free first, then reclaim LRU-first
+    assert got is not None and len(got) == 5
+    assert evicted == [(b1, b"k1"), (b0, b"k0")]
+    assert a.evictions == 2
+    assert a.num_evictable == 0 and not a.is_cached(b0)
+
+
+def test_allocator_all_or_nothing_spans_evictable():
+    a = BlockAllocator(num_blocks=6, block_size=4)
+    blks = a.alloc(2)
+    for b in blks:
+        a.register_cached(b, bytes([b]))
+        a.decref(b)
+    assert (a.num_free, a.num_evictable) == (3, 2)
+    assert a.alloc(6) is None, "over-ask must not evict anything"
+    assert a.num_evictable == 2 and a.evictions == 0
+    assert len(a.alloc(5)) == 5
+
+
+def test_register_cached_requires_live_block():
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    with pytest.raises(ValueError):
+        a.register_cached(2, b"k")
+
+
+# ---------------------------- prefix cache ---------------------------- #
+def test_prefix_cache_insert_match_first_writer_wins():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    pc = PrefixCache(a)
+    keys = chain_keys(np.arange(8, dtype=np.int32), 4)
+    blocks = a.alloc(2)
+    assert pc.insert(keys[0], blocks[0])
+    assert pc.insert(keys[1], blocks[1])
+    assert len(pc) == 2 and pc.inserts == 2
+    dup = a.alloc(1)[0]
+    assert not pc.insert(keys[0], dup), "first writer wins"
+    assert a.cached_key(dup) is None
+    m = pc.match(keys)
+    assert m == blocks
+    assert [a.refcount(b) for b in blocks] == [2, 2]
+    assert pc.hits == 2
+    # a miss ends the walk without touching later keys
+    assert pc.match([b"absent", keys[0]]) == []
+    assert pc.misses >= 1
+
+
+def test_prefix_cache_eviction_drops_mapping_and_orphans_chain():
+    a = BlockAllocator(num_blocks=4, block_size=4)   # capacity 3
+    pc = PrefixCache(a)
+    keys = chain_keys(np.arange(8, dtype=np.int32), 4)
+    b0, b1 = a.alloc(2)
+    pc.insert(keys[0], b0)
+    pc.insert(keys[1], b1)
+    a.decref(b0)
+    a.decref(b1)             # LRU order: b0 then b1
+    assert a.num_evictable == 2 and a.num_free == 1
+    got = a.alloc(2)         # free block + LRU-evict b0
+    assert b0 in got and a.evictions == 1
+    assert len(pc) == 1, "evict hook must drop the mapping"
+    # b1's key survives but the chain walk stops at the evicted link:
+    # descendants are orphaned, not wrongly matched
+    assert pc.match(keys) == []
+    # revived by a later match? no -- orphan ages out under pressure
+    for blk in got:
+        a.decref(blk)
+    assert a.alloc(3) is not None
+    assert len(pc) == 0
+
+
+def test_internal_fragmentation_counts_shared_blocks_once():
+    a = BlockAllocator(num_blocks=16, block_size=8)
+    # two tables sharing physical block 3 for their first 8 tokens;
+    # fills 13 and 10 -> private tails waste (8-5) + (8-2), the shared
+    # block wastes 0, counted once
+    usage = [([3, 4], 13), ([3, 5], 10)]
+    assert a.internal_fragmentation(usage) == 3 + 6
+    # deepest fill wins for the shared block: 6 vs 3 tokens -> waste 2
+    usage = [([3], 6), ([3], 3)]
+    assert a.internal_fragmentation(usage) == 2
+    # legacy int form still supported, mixed
+    assert a.internal_fragmentation([5, ([3], 6)]) == 3 + 2
+
+
+# ------------------- scheduler-level sharing driver ------------------- #
+def _sim_token(rid, n_out):
+    """Deterministic stand-in for sampling: a pure function of
+    (request, position), like the server's per-(rid, position) keys --
+    so recompute-style replay regenerates identical tokens."""
+    return (rid * 7919 + n_out * 31 + 5) % VOCAB
+
+
+def _read_through_table(pool, req, bs):
+    return np.asarray([pool[req.table.blocks[p // bs], p % bs]
+                       for p in range(req.ctx_len)])
+
+
+def _check_invariants(sched, pool):
+    a = sched.allocator
+    # conservation: every allocatable block is in exactly one state
+    assert a.num_used + a.num_free + a.num_evictable == a.capacity
+    assert not (set(a._evictable) & a._used), "evictable ∩ used"
+    assert not (set(a._evictable) & set(a._free)), "evictable ∩ free"
+    assert not (a._used & set(a._free)), "used ∩ free"
+    # refcounts == table multiplicity (no leaks, no phantom refs)
+    refs = Counter()
+    for _, req in sched.active():
+        for blk in req.table.blocks:
+            refs[blk] += 1
+    assert dict(refs) == {b: a.refcount(b) for b in a._used}
+    # content: each request reads its own token stream through its
+    # table -- shared, copied-on-write, and revived blocks included
+    for _, req in sched.active():
+        full = req.replay_tokens
+        got = _read_through_table(pool, req, a.block_size)
+        np.testing.assert_array_equal(got, full[:req.ctx_len])
+
+
+def _drive(sched, trace, max_steps=3000):
+    """Mimic ContinuousBatchingServer.run() against a host-side token
+    pool (pool[block, slot] = token written there): prefill chunks and
+    decode steps write tokens instead of KV, copy-on-write copies rows.
+    Returns ({rid: tokens}, {rid: final through-table read}, stats)."""
+    bs = sched.allocator.block_size
+    pool = np.full((sched.allocator.num_blocks, bs), -1, np.int64)
+    pending = deque(trace)
+    results, final_read = {}, {}
+    stats = {"cow": 0, "preempt": 0}
+    step = 0
+
+    def append(req, tok):
+        req.out.append(int(tok))
+        if len(req.out) >= req.max_new_tokens:
+            req.done = True
+
+    while pending or sched.has_work():
+        assert step < max_steps, "driver did not converge"
+        while pending and pending[0][0] <= step:
+            _, req = pending.popleft()
+            sched.submit(req, now=float(step))
+        for _, req in sched.active():
+            if req.done:
+                final_read[req.rid] = _read_through_table(pool, req, bs)
+        for req in sched.retire_finished():
+            results[req.rid] = list(req.out)
+        sched.admit(step)
+        cows = sched.drain_cow_copies()
+        for src, dst in cows:
+            pool[dst] = pool[src].copy()
+        stats["cow"] += len(cows)
+        if not sched.active():
+            assert not sched.queue, "stalled: queued request unadmittable"
+            step += 1
+            continue
+        for chunk in sched.prefill_plan():
+            req, replay = chunk.req, chunk.req.replay_tokens
+            for p in range(chunk.start, chunk.start + chunk.length):
+                pool[req.table.blocks[p // bs], p % bs] = replay[p]
+            req.prefilled += chunk.length
+            req.ctx_len += chunk.length
+            sched.note_prefilled(req)
+            if req.prefilled == len(replay):
+                req.state = RUNNING
+                append(req, _sim_token(req.rid, len(req.out)))
+        if sched.any_running():
+            stats["preempt"] += len(sched.grow_for_decode())
+            for _, req in sched.running():
+                pool[req.table.blocks[req.ctx_len // bs],
+                     req.ctx_len % bs] = req.out[-1]
+                req.ctx_len += 1
+                append(req, _sim_token(req.rid, len(req.out)))
+        _check_invariants(sched, pool)
+        step += 1
+    return results, final_read, stats
+
+
+def _mk_sched(batch, capacity, bs, max_blocks, chunk, cache=True):
+    alloc = BlockAllocator(capacity + RESERVED_BLOCKS, bs)
+    pc = PrefixCache(alloc) if cache else None
+    return Scheduler(batch, alloc, max_blocks, chunk, prefix_cache=pc)
+
+
+def _mk_trace(specs):
+    """specs: (submit_step, rid, prompt tokens, max_new)."""
+    return [(step, Request(rid=rid,
+                           prompt=np.asarray(prompt, np.int32),
+                           max_new_tokens=max_new))
+            for step, rid, prompt, max_new in specs]
+
+
+def _trace_vs_oracle(mk_trace, *, batch, capacity, bs, max_blocks,
+                     chunk):
+    """Run a trace with sharing on, then the no-sharing oracle, and
+    require identical token streams and bytes-identical final
+    through-table reads."""
+    sched = _mk_sched(batch, capacity, bs, max_blocks, chunk, cache=True)
+    res, reads, stats = _drive(sched, mk_trace())
+    oracle = _mk_sched(batch, capacity, bs, max_blocks, chunk,
+                       cache=False)
+    o_res, o_reads, _ = _drive(oracle, mk_trace())
+    assert res == o_res
+    assert reads.keys() == o_reads.keys()
+    for rid in reads:
+        np.testing.assert_array_equal(reads[rid], o_reads[rid])
+    return sched, stats
+
+
+def test_scheduler_sharing_seeded_traffic():
+    bs = 4
+    rng = np.random.default_rng(0)
+    base_a = rng.integers(0, VOCAB, 2 * bs)      # 2 full shared blocks
+    base_b = rng.integers(0, VOCAB, 2 * bs)
+
+    def suffix(n, seed):
+        return np.random.default_rng(seed).integers(0, VOCAB, n)
+
+    def trace():
+        specs = [
+            # tenant A seeds the cache, later A requests share it
+            (0, 0, np.concatenate([base_a, suffix(3, 1)]), 5),
+            (1, 1, np.concatenate([base_a, suffix(2, 2)]), 4),
+            (2, 2, base_a.copy(), 4),             # full hit -> CoW
+            # tenant B's decode growth exhausts the free list while
+            # A's cached blocks sit evictable -> LRU eviction
+            (3, 3, np.concatenate([base_b, suffix(3, 3)]), 7),
+            (4, 4, base_b.copy(), 3),             # full hit again
+        ]
+        return _mk_trace(specs)
+
+    max_total = max(len(req.prompt) + req.max_new_tokens
+                    for _, req in trace())
+    max_blocks = -(-max_total // bs)
+    # tight pool: real LRU eviction pressure, still >= one request
+    capacity = max_blocks + 1
+    sched, stats = _trace_vs_oracle(
+        trace, batch=1, capacity=capacity, bs=bs, max_blocks=max_blocks,
+        chunk=2 * bs)
+    # the trace must actually exercise the machinery it claims to
+    assert sched.prefix_cache.hits > 0
+    assert stats["cow"] >= 1, "full-hit admissions must copy-on-write"
+    assert sched.allocator.evictions > 0, "tight pool must evict"
+
+
+def test_scheduler_sharing_preemption_traffic():
+    bs = 4
+    rng = np.random.default_rng(7)
+    base = rng.integers(0, VOCAB, bs)
+
+    def trace():
+        specs = [(0, rid,
+                  np.concatenate([base,
+                                  np.random.default_rng(20 + rid)
+                                  .integers(0, VOCAB, 3)]),
+                  8) for rid in range(4)]
+        return _mk_trace(specs)
+
+    max_blocks = -(-(bs + 3 + 8) // bs)
+    sched, stats = _trace_vs_oracle(
+        trace, batch=3, capacity=max_blocks + 1, bs=bs,
+        max_blocks=max_blocks, chunk=bs)
+    assert stats["preempt"] > 0, \
+        "tight pool + concurrent decode must preempt"
+    assert sched.prefix_cache.hits > 0
+
+
+try:        # optional dev dep; see requirements-dev.txt
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+    given = settings = lambda *a, **k: (lambda f: f)
+
+    class st:       # placeholder so decorator args still evaluate
+        @staticmethod
+        def data():
+            return None
+
+
+@pytest.mark.skipif(not _HAVE_HYPOTHESIS, reason="hypothesis not "
+                    "installed (optional dev dep)")
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_scheduler_sharing_random_traffic(data):
+    """Random admit/extend/CoW/preempt/evict sequences: refcount
+    invariants hold after every step (checked inside the driver) and
+    the shared-pool run is bytes-identical to the no-sharing oracle."""
+    bs = data.draw(st.sampled_from([2, 4]), label="block_size")
+    n_base = data.draw(st.integers(1, 3), label="n_base_prompts")
+    n_reqs = data.draw(st.integers(2, 8), label="n_requests")
+    seed = data.draw(st.integers(0, 1 << 16), label="rng_seed")
+    rng = np.random.default_rng(seed)
+    bases = [rng.integers(0, VOCAB,
+                          bs * data.draw(st.integers(1, 3),
+                                         label=f"base_blocks_{i}"))
+             for i in range(n_base)]
+    specs = []
+    for rid in range(n_reqs):
+        base = bases[data.draw(st.integers(0, n_base - 1),
+                               label=f"tenant_{rid}")]
+        # suffix 0 on a repeated base prompt is the full-hit CoW path
+        sfx = data.draw(st.integers(0, 2 * bs), label=f"suffix_{rid}")
+        prompt = np.concatenate([base, rng.integers(0, VOCAB, sfx)])
+        max_new = data.draw(st.integers(1, 2 * bs),
+                            label=f"max_new_{rid}")
+        step = data.draw(st.integers(0, 6), label=f"submit_{rid}")
+        specs.append((step, rid, prompt, max_new))
+    specs.sort(key=lambda s: (s[0], s[1]))
+    max_blocks = max(-(-(len(p) + mn) // bs) for _, _, p, mn in specs)
+    # capacity >= blocks_for(prompt + max_new) guarantees no stall
+    # (see scheduler admission analysis); the slack dial sets how much
+    # eviction/preemption pressure the run sees
+    capacity = max_blocks + data.draw(st.integers(0, 4), label="slack")
+    batch = data.draw(st.integers(1, 3), label="batch")
+    chunk = bs * data.draw(st.integers(1, 2), label="chunk_blocks")
+    _trace_vs_oracle(lambda: _mk_trace(specs), batch=batch,
+                     capacity=capacity, bs=bs, max_blocks=max_blocks,
+                     chunk=chunk)
+
+
+# --------------------------- server (jitted) -------------------------- #
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _server(params, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_chunk", 8)
+    return ContinuousBatchingServer(TINY, params, **kw)
+
+
+_SHARED = np.random.default_rng(42).integers(0, VOCAB, 8).astype(np.int32)
+
+
+def _shared_req(rid, suffix_len=3, max_new=4):
+    rng = np.random.default_rng(1000 + rid)
+    prompt = np.concatenate(
+        [_SHARED, rng.integers(0, VOCAB, suffix_len)]).astype(np.int32)
+    return Request(rid=rid, prompt=prompt, max_new_tokens=max_new)
+
+
+def test_server_greedy_streams_identical_cache_on_off(tiny_params):
+    def serve(on):
+        server = _server(tiny_params, prefix_cache=on)
+        for rid in range(6):
+            server.submit(_shared_req(rid))
+        return server.run(), server
+
+    res_on, s_on = serve(True)
+    res_off, s_off = serve(False)
+    assert res_on == res_off, \
+        "prefix cache changed greedy token streams"
+    snap_on, snap_off = s_on.snapshot(), s_off.snapshot()
+    assert snap_on.cached_prefix_tokens > 0
+    assert snap_on.prefill_tokens_computed < \
+        snap_off.prefill_tokens_computed
+    assert snap_on.cached_token_fraction > 0
+    assert snap_off.cached_prefix_tokens == 0
+    assert snap_off.cached_token_fraction == 0.0
+
+
+def test_server_full_hit_recomputes_final_token_cow(tiny_params):
+    prompt = _SHARED.copy()              # exactly 2 full blocks
+    on = _server(tiny_params, prefix_cache=True)
+    on.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=4))
+    first = on.run()
+    on.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=4))
+    second = on.run()
+    snap = on.snapshot()
+    # full hit drops back one token so first-step logits exist
+    assert snap.cached_prefix_tokens == len(prompt) - 1
+    off = _server(tiny_params, prefix_cache=False)
+    off.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=4))
+    off.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=4))
+    ref = off.run()
+    assert first[0] == ref[0] and second[1] == ref[1]
+
+
+def test_server_preempt_resume_with_shared_blocks(tiny_params):
+    # pool fits ~1.5 requests: decode growth preempts a request that
+    # holds shared cached blocks; its replay must re-match them and
+    # regenerate the same greedy tokens
+    kw = dict(max_len=24, num_blocks=1 + 7)
+
+    def serve(on):
+        server = _server(tiny_params, prefix_cache=on, **kw)
+        for rid in range(3):
+            server.submit(_shared_req(rid, suffix_len=3, max_new=8))
+        return server.run(), server
+
+    res_on, s_on = serve(True)
+    res_off, s_off = serve(False)
+    assert res_on == res_off
+    assert max(s_on.snapshot().preemptions,
+               s_off.snapshot().preemptions) > 0, \
+        "pool was roomy enough that preemption never happened"
+    assert s_on.snapshot().cached_prefix_tokens > 0
+
+
+def test_server_telemetry_occupancy_split_and_export(tiny_params):
+    from repro.obs.registry import MetricsRegistry, \
+        export_prefix_cache_stats
+    server = _server(tiny_params, prefix_cache=True)
+    for rid in range(3):
+        server.submit(_shared_req(rid))
+    server.run()
+    snap = server.snapshot()
+    # drained: nothing live, retired cached blocks parked evictable
+    assert snap.kv_blocks_live == 0
+    assert snap.kv_blocks_evictable > 0
+    assert snap.kv_blocks_evictable <= snap.kv_blocks_total
+    assert snap.prefix_evictions == server.allocator.evictions
+    reg = MetricsRegistry()
+    export_prefix_cache_stats(server, reg)
+    gauges = reg.snapshot()["gauges"]
+    assert gauges["kv_pool_blocks_live"] == 0
+    assert gauges["kv_pool_blocks_evictable"] == \
+        snap.kv_blocks_evictable
+    assert gauges["prefix_cache_block_hits"] > 0
+    assert gauges["prefix_cache_entries"] == len(server.prefix_cache)

@@ -49,6 +49,15 @@ GATED = {
     "latency_selected": "lower_worse",
     "predicted_cycles": "higher_worse",
     "drifted_bins": "higher_worse",
+    # fleet: routing/admission counters (wave-clocked, deterministic
+    # for a fixed trace)
+    "waves": "higher_worse",
+    "queue_depth_max": "higher_worse",
+    "rejected": "higher_worse",
+    "rejected_below_cap": "higher_worse",
+    "affinity_gain": "lower_worse",
+    "prefill_imbalance": "higher_worse",
+    "determinism_ok": "lower_worse",
 }
 
 #: reported for context only (timing noise)

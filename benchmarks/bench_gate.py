@@ -40,6 +40,7 @@ PAIRS: Tuple[Tuple[str, str], ...] = (
     ("BENCH_serve.json", "benchmarks/baselines/serve.json"),
     ("BENCH_pipeline.json", "benchmarks/baselines/pipeline_small.json"),
     ("BENCH_decode.json", "benchmarks/baselines/decode_small.json"),
+    ("BENCH_fleet.json", "benchmarks/baselines/fleet_small.json"),
 )
 
 

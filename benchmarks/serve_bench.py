@@ -19,6 +19,7 @@ identical.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -26,19 +27,42 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
+from repro.serving.fleet.trace import arrival_waves
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One request of a generated trace (wave-stamped arrival)."""
+    rid: int
+    tenant: str             # shared-prompt identity (admission label)
+    prompt: np.ndarray
+    max_new: int
+    arrival_wave: int       # 0 for the legacy submit-all-up-front mode
 
 
 def make_trace(rng, requests: int, vocab: int, *, n_prompts: int = 3,
                zipf_a: float = 1.2, sys_len: int = 48, user_len: int = 12,
-               new_tokens: int = 12):
+               new_tokens: int = 12, arrival: str = "fixed",
+               arrival_rate: float = 2.0, arrival_seed: int = 0,
+               **arrival_kw):
     """Zipf-skewed multi-tenant request mix over shared system prompts.
 
-    Returns (list of (rid, prompt, max_new), shared_token_fraction).
+    ``arrival`` stamps each request with an arrival wave
+    (``repro.serving.fleet.trace.arrival_waves``): the default
+    ``fixed`` keeps the legacy everything-at-wave-0 behavior, and uses
+    a *separate* seeded generator for the arrival draws so prompt
+    content -- and therefore every committed fixed-mode baseline
+    counter -- is identical across modes.
+
+    Returns (list of :class:`TraceRequest`, shared_token_fraction).
     """
     sys_prompts = [rng.integers(0, vocab, sys_len).astype(np.int32)
                    for _ in range(n_prompts)]
     weights = 1.0 / np.arange(1, n_prompts + 1) ** zipf_a
     weights /= weights.sum()
+    waves = arrival_waves(requests, arrival,
+                          rng=np.random.default_rng(arrival_seed),
+                          rate=arrival_rate, **arrival_kw)
     reqs, shared_tokens, total_tokens = [], 0, 0
     for rid in range(requests):
         tenant = rng.choice(n_prompts, p=weights)
@@ -46,7 +70,8 @@ def make_trace(rng, requests: int, vocab: int, *, n_prompts: int = 3,
         prompt = np.concatenate([sys_prompts[tenant], suffix])
         # mixed output lengths exercise per-step retire/admit
         n_new = new_tokens if rid % 3 else max(2, new_tokens // 4)
-        reqs.append((rid, prompt, n_new))
+        reqs.append(TraceRequest(rid, f"tenant-{tenant}", prompt, n_new,
+                                 waves[rid]))
         shared_tokens += sys_len
         total_tokens += len(prompt)
     return reqs, shared_tokens / total_tokens
@@ -74,9 +99,9 @@ def _serve(cfg, params, trace, *, prefix_cache: bool, batch: int,
     del jax
 
     t0 = time.time()
-    for rid, prompt, n_new in trace:
-        server.submit(Request(rid=rid, prompt=prompt.copy(),
-                              max_new_tokens=n_new))
+    for tr in trace:
+        server.submit(Request(rid=tr.rid, prompt=tr.prompt.copy(),
+                              max_new_tokens=tr.max_new))
     results = server.run()
     wall = time.time() - t0
     snap = server.snapshot()

@@ -44,10 +44,19 @@ def _freeze_labels(labels: Optional[Dict[str, str]]) -> Labels:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def _escape_label_value(value: str) -> str:
+    """Prometheus exposition escaping for label values: backslash,
+    double quote, and line feed must be escaped or the ``k="v"`` pair
+    is syntactically invalid (tenant ids and file paths are label
+    values under the serving fleet)."""
+    return (value.replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
 def _label_suffix(labels: Labels) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"' for k, v in labels)
     return "{" + inner + "}"
 
 

@@ -86,6 +86,19 @@ class PrefixCache:
     def keys_for(self, tokens: Sequence[int]) -> List[bytes]:
         return chain_keys(tokens, self.block_size)
 
+    def probe(self, keys: Sequence[bytes]) -> int:
+        """Resident-prefix length in *blocks* without taking references
+        or touching the hit/miss counters -- the read-only prediction a
+        fleet router uses to score replicas.  A block counted here may
+        still be evicted before the request lands (the prediction is a
+        routing hint, not a reservation)."""
+        n = 0
+        for key in keys:
+            if key not in self._map:
+                break
+            n += 1
+        return n
+
     def match(self, keys: Sequence[bytes]) -> List[int]:
         """Longest cached prefix of the key chain; every returned block
         has one reference taken on behalf of the caller (so a

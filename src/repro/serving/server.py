@@ -23,6 +23,7 @@ identical tokens.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -49,6 +50,15 @@ from repro.serving.telemetry import Telemetry, TelemetrySnapshot
 #: function of (rid, position))
 _SAMPLE_STRIDE = 1 << 20
 _SAMPLE_MOD = 1 << 31
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOutcome:
+    """What one scheduler iteration did (the unit a fleet drives in
+    lockstep waves)."""
+    finished: Dict[int, List[int]]      # rid -> tokens retired this step
+    decoded: bool                       # a decode batch launched
+    progressed: bool                    # False = nothing active (drained)
 
 
 class ContinuousBatchingServer:
@@ -278,6 +288,57 @@ class ContinuousBatchingServer:
             self._append_token(req, int(toks[i]))
 
     # ------------------------------------------------------------------ #
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def step_once(self) -> StepOutcome:
+        """One scheduler iteration: retire, admit, apply CoW copies,
+        prefill chunks, decode (at most one batch).  The unit
+        ``run()`` loops over and a fleet drives in lockstep waves; a
+        stalled scheduler (queued work that can never be admitted)
+        raises."""
+        results: Dict[int, List[int]] = {}
+        for req in self.scheduler.retire_finished():
+            results[req.rid] = req.out
+        now = self.telemetry.now()
+        for req in self.scheduler.admit(self._step):
+            self.telemetry.record_queue_wait(now - req.arrival_t)
+            if req.cached_prefix_tokens:
+                self.telemetry.record_cached_prefix(
+                    req.cached_prefix_tokens)
+        cows = self.scheduler.drain_cow_copies()
+        if cows:
+            # private replacements for shared blocks about to be
+            # written; must land before this step's prefill chunks
+            src = jnp.asarray([s for s, _ in cows], jnp.int32)
+            dst = jnp.asarray([d for _, d in cows], jnp.int32)
+            self.pages = self._copy_fn(self.pages, src, dst)
+        if not self.scheduler.active():
+            if self.scheduler.queue:
+                raise RuntimeError(
+                    "serving stalled: queued request cannot be "
+                    "admitted (KV block pool too small?)")
+            return StepOutcome(results, decoded=False, progressed=False)
+        plan = self.scheduler.prefill_plan()
+        for chunk in plan:
+            self._run_prefill_chunk(chunk)
+        decoded = False
+        if self.scheduler.any_running():
+            for _ in self.scheduler.grow_for_decode():
+                self.telemetry.record_preemption()
+            if self.scheduler.any_running():
+                self._run_decode()
+                decoded = True
+        self.telemetry.record_step(decoded=decoded,
+                                   prefill_chunks=len(plan),
+                                   kv_occupancy=self.allocator.occupancy,
+                                   queue_depth=len(self.scheduler.queue))
+        self._step += 1
+        if not plan and not decoded and not any(
+                r.done for r in self.scheduler.slots if r):
+            raise RuntimeError("scheduler made no progress")
+        return StepOutcome(results, decoded=decoded, progressed=True)
+
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
         """Serve until queue + slots drain, or ``max_steps`` decode
         iterations when given (default: drain -- total decode work is
@@ -289,45 +350,13 @@ class ContinuousBatchingServer:
         if max_steps is None:
             max_steps = float("inf")
         while self.scheduler.has_work():
-            for req in self.scheduler.retire_finished():
-                results[req.rid] = req.out
-            for req in self.scheduler.admit(self._step):
-                if req.cached_prefix_tokens:
-                    self.telemetry.record_cached_prefix(
-                        req.cached_prefix_tokens)
-            cows = self.scheduler.drain_cow_copies()
-            if cows:
-                # private replacements for shared blocks about to be
-                # written; must land before this step's prefill chunks
-                src = jnp.asarray([s for s, _ in cows], jnp.int32)
-                dst = jnp.asarray([d for _, d in cows], jnp.int32)
-                self.pages = self._copy_fn(self.pages, src, dst)
-            if not self.scheduler.active():
-                if self.scheduler.queue:
-                    raise RuntimeError(
-                        "serving stalled: queued request cannot be "
-                        "admitted (KV block pool too small?)")
+            out = self.step_once()
+            results.update(out.finished)
+            if not out.progressed:
                 break       # drained
-            plan = self.scheduler.prefill_plan()
-            for chunk in plan:
-                self._run_prefill_chunk(chunk)
-            decoded = False
-            if self.scheduler.any_running():
-                for _ in self.scheduler.grow_for_decode():
-                    self.telemetry.record_preemption()
-                if self.scheduler.any_running():
-                    self._run_decode()
-                    decoded = True
-                    decode_steps += 1
-            self.telemetry.record_step(decoded=decoded,
-                                       prefill_chunks=len(plan),
-                                       kv_occupancy=self.allocator.occupancy)
-            self._step += 1
+            decode_steps += int(out.decoded)
             if decode_steps >= max_steps:
                 break
-            if not plan and not decoded and not any(
-                    r.done for r in self.scheduler.slots if r):
-                raise RuntimeError("scheduler made no progress")
         for req in self.scheduler.retire_finished():
             results[req.rid] = req.out
         # step budget exhausted: report partial generations
@@ -338,4 +367,4 @@ class ContinuousBatchingServer:
         return results
 
 
-__all__ = ["ContinuousBatchingServer", "Request"]
+__all__ = ["ContinuousBatchingServer", "Request", "StepOutcome"]

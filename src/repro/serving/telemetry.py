@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -45,6 +45,15 @@ class TelemetrySnapshot:
     cached_prefix_tokens: int = 0
     cached_token_fraction: float = 0.0
     prefix_evictions: int = 0
+    # -- admission / router signals ----------------------------------- #
+    # submit -> admit latency percentiles (the head-of-line wait a
+    # router's load signal should see, not just instantaneous depth)
+    queue_wait_p50_ms: Optional[float] = None
+    queue_wait_samples: int = 0
+    # per-step queued-depth history rollups (deterministic for a fixed
+    # trace: steps are logical, not wall clock)
+    queue_depth_max: int = 0
+    queue_depth_history: Tuple[int, ...] = ()
 
 
 class Telemetry:
@@ -64,6 +73,8 @@ class Telemetry:
         self.cached_prefix_tokens = 0
         self.peak_kv_occupancy = 0.0
         self.ttft_s: List[float] = []
+        self.queue_wait_s: List[float] = []
+        self.queue_depth_history: List[int] = []
 
     def record_submit(self) -> None:
         self.submitted += 1
@@ -88,12 +99,19 @@ class Telemetry:
     def record_preemption(self) -> None:
         self.preemptions += 1
 
+    def record_queue_wait(self, wait_s: float) -> None:
+        """Submit -> admit latency of one admitted request."""
+        self.queue_wait_s.append(wait_s)
+
     def record_step(self, *, decoded: bool, prefill_chunks: int,
-                    kv_occupancy: float = 0.0) -> None:
+                    kv_occupancy: float = 0.0,
+                    queue_depth: Optional[int] = None) -> None:
         self.steps += 1
         self.decode_steps += int(decoded)
         self.prefill_chunks += prefill_chunks
         self.peak_kv_occupancy = max(self.peak_kv_occupancy, kv_occupancy)
+        if queue_depth is not None:
+            self.queue_depth_history.append(int(queue_depth))
 
     def now(self) -> float:
         return self._clock()
@@ -102,6 +120,7 @@ class Telemetry:
                  block_usage: List) -> TelemetrySnapshot:
         elapsed = max(self._clock() - self.t0, 1e-9)
         ttft = np.asarray(self.ttft_s, np.float64)
+        qwait = np.asarray(self.queue_wait_s, np.float64)
         prefill_total = self.prefill_tokens_computed + \
             self.cached_prefix_tokens
         return TelemetrySnapshot(
@@ -135,6 +154,12 @@ class Telemetry:
             cached_token_fraction=(self.cached_prefix_tokens /
                                    prefill_total if prefill_total else 0.0),
             prefix_evictions=allocator.evictions,
+            queue_wait_p50_ms=(float(np.percentile(qwait, 50)) * 1e3
+                               if qwait.size else None),
+            queue_wait_samples=int(qwait.size),
+            queue_depth_max=(max(self.queue_depth_history)
+                             if self.queue_depth_history else 0),
+            queue_depth_history=tuple(self.queue_depth_history),
         )
 
 
@@ -201,6 +226,12 @@ def export_to_registry(snap: TelemetrySnapshot, registry=None,
       "cached / (cached + computed) prefill tokens")
     g("prefix_evictions", snap.prefix_evictions,
       "cached blocks reclaimed under pool pressure")
+    g("queue_wait_p50_ms", snap.queue_wait_p50_ms,
+      "median submit -> admit latency")
+    g("queue_wait_samples", snap.queue_wait_samples,
+      "admissions behind the queue-wait percentiles")
+    g("queue_depth_max", snap.queue_depth_max,
+      "max queued depth over the per-step history")
     return reg
 
 

@@ -114,6 +114,30 @@ def test_export_prometheus_format():
     assert 'lat{quantile="0.50"} 2' in text
 
 
+def test_export_prometheus_label_escaping_round_trips():
+    """Label values containing backslash, double quote, and newline
+    must escape per the exposition format -- and unescape back to the
+    original value (tenant ids are label values under the serving
+    fleet, and they are client-controlled strings)."""
+    import re
+    hostile = 'a"b\\c\nd'
+    reg = MetricsRegistry()
+    reg.gauge("fleet_rejected_by_tenant",
+              labels={"tenant": hostile}).set(2)
+    text = reg.export_prometheus()
+    # a raw newline inside the label value would split the sample line
+    # in two, so exactly one parseable line proves the escaping
+    (line,) = [ln for ln in text.splitlines()
+               if ln.startswith("fleet_rejected_by_tenant{")]
+    m = re.fullmatch(r'fleet_rejected_by_tenant\{tenant="((?:[^"\\]|'
+                     r'\\.)*)"\} 2', line)
+    assert m, f"label pair not parseable: {line!r}"
+    unescaped = re.sub(r"\\(.)",
+                       lambda e: "\n" if e.group(1) == "n" else e.group(1),
+                       m.group(1))
+    assert unescaped == hostile
+
+
 def test_registry_snapshot_is_atomic_copy():
     reg = MetricsRegistry()
     g = reg.gauge("x")

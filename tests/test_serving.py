@@ -254,6 +254,72 @@ def test_partial_results_on_step_budget(tiny_params):
     assert 1 <= len(results[0]) < 16
 
 
+def test_fcfs_admission_preserves_submit_order():
+    """FCFS: free slots fill from the queue head in submission order."""
+    from repro.serving.scheduler import PREFILLING, QUEUED, Scheduler
+    a = BlockAllocator(num_blocks=32, block_size=4)
+    sched = Scheduler(batch_size=2, allocator=a, max_blocks_per_seq=4,
+                      prefill_chunk=8)
+    reqs = [_req(rid) for rid in range(3)]
+    for r in reqs:
+        sched.submit(r, now=float(r.rid))
+    admitted = sched.admit(step=0)
+    assert [r.rid for r in admitted] == [0, 1]
+    assert admitted[0]._admit_seq < admitted[1]._admit_seq
+    assert reqs[0].state == PREFILLING and reqs[2].state == QUEUED
+    assert [r.rid for r in sched.queue] == [2]
+
+
+def test_fcfs_head_of_line_blocks_smaller_requests():
+    """Admission stops at the first request that does not fit: a small
+    request behind a big head must not leapfrog it (the head would
+    starve), and the head goes first once blocks free up."""
+    from repro.serving.scheduler import Scheduler
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    hog = a.alloc(6)                    # leave 1 free block
+    sched = Scheduler(batch_size=2, allocator=a, max_blocks_per_seq=4,
+                      prefill_chunk=8)
+    big = _req(0, prompt_len=8, max_new=4)      # needs 2 blocks
+    small = _req(1, prompt_len=4, max_new=4)    # would fit in the 1 free
+    sched.submit(big, now=0.0)
+    sched.submit(small, now=0.0)
+    assert sched.admit(step=0) == []
+    assert [r.rid for r in sched.queue] == [0, 1], \
+        "small request leapfrogged the head of the queue"
+    a.free(hog)
+    admitted = sched.admit(step=1)
+    assert [r.rid for r in admitted] == [0, 1], "head must admit first"
+
+
+def test_queue_wait_telemetry_and_depth_history(tiny_params):
+    """Scheduling delay (submit -> admit) and per-step queue depth are
+    recorded: batch of 1 makes the waits strictly staircase and the
+    depth history deterministic."""
+    srv = _server(tiny_params, batch_size=1, max_len=32, num_blocks=17)
+    for rid in range(3):
+        srv.submit(_req(rid, max_new=2))
+    srv.run()
+    snap = srv.snapshot()
+    assert snap.queue_wait_samples == 3
+    assert snap.queue_wait_p50_ms is not None
+    assert snap.queue_wait_p50_ms >= 0.0
+    # queue depth: starts at 2 waiting (one admitted), drains to 0
+    assert snap.queue_depth_history[0] == 2
+    assert snap.queue_depth_max == 2
+    assert snap.queue_depth_history[-1] == 0
+    hist = list(snap.queue_depth_history)
+    assert hist == sorted(hist, reverse=True), "depth must only drain"
+
+    from repro.obs.registry import MetricsRegistry
+    from repro.serving.telemetry import export_to_registry
+    reg = MetricsRegistry()
+    export_to_registry(snap, reg, prefix="serve")
+    gauges = reg.snapshot()["gauges"]
+    assert gauges["serve_queue_wait_p50_ms"] == snap.queue_wait_p50_ms
+    assert gauges["serve_queue_wait_samples"] == 3
+    assert gauges["serve_queue_depth_max"] == 2
+
+
 def test_telemetry_snapshot_sane(tiny_params):
     srv = _server(tiny_params, batch_size=2, max_len=32, num_blocks=17)
     for rid in range(3):
